@@ -1,0 +1,48 @@
+"""Microbenchmarks for the Pallas kernels (interpret mode on CPU: the
+numbers are a harness check, not TPU performance; on TPU the same harness
+times the Mosaic-compiled kernels) + jnp-reference comparison."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def bench() -> List[str]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, S, H, K, d = 1, 512, 4, 2, 64
+    q = jax.random.normal(key, (B, S, H, d))
+    k = jax.random.normal(key, (B, S, K, d))
+    v = jax.random.normal(key, (B, S, K, d))
+    us_k = _time(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v)
+    us_r = _time(jax.jit(lambda a, b, c: ref.attention_ref(a, b, c)), q, k, v)
+    flops = 4 * B * H * S * S * d
+    rows.append(f"kernel_flash_attention,{us_k:.1f},"
+                f"ref_us={us_r:.1f};flops={flops:.3e};shape=b{B}s{S}h{H}d{d}")
+
+    x = jax.random.normal(key, (1 << 20,))
+    u = jax.random.uniform(key, (1 << 20,))
+    us_k = _time(lambda a, b: ops.qsgd_quantize(a, b), x, u)
+    us_r = _time(jax.jit(lambda a, b: ref.quantize_ref(a, b)), x, u)
+    rows.append(f"kernel_qsgd_quantize,{us_k:.1f},"
+                f"ref_us={us_r:.1f};bytes={x.nbytes:.3e};n=1M")
+
+    w = jax.random.normal(key, (16, 1 << 16))
+    us_k = _time(lambda a: ops.param_mean_and_sqdev(a), w)
+    us_r = _time(jax.jit(lambda a: ref.mean_and_sqdev_ref(a)), w)
+    rows.append(f"kernel_param_variance,{us_k:.1f},"
+                f"ref_us={us_r:.1f};bytes={w.nbytes:.3e};replicas=16")
+    return rows

@@ -1,0 +1,45 @@
+"""Quickstart: train a tiny LM with the paper's ADPSGD (Algorithm 2) across
+8 simulated local-SGD workers, and watch the averaging period adapt.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import AveragingConfig, get_config, reduced
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.steps import make_loss_fn
+from repro.models import model as M
+from repro.optim import get_optimizer, make_lr_schedule
+from repro.runtime.loop import train_periodic
+
+STEPS = 100
+REPLICAS = 8
+
+cfg = reduced(get_config("olmo-1b").model, n_layers=2, d_model=128,
+              vocab_size=256)
+data = SyntheticTokens(cfg.vocab_size, seq_len=64, n_samples=2048)
+params0 = M.init_params(jax.random.PRNGKey(0), cfg)
+
+hist = train_periodic(
+    loss_fn=make_loss_fn(cfg),
+    optimizer=get_optimizer("momentum"),
+    params0=params0,
+    n_replicas=REPLICAS,
+    data_fn=data.batches(n_replicas=REPLICAS, per_replica_batch=8),
+    lr_fn=make_lr_schedule("step", 0.3, STEPS, decay_steps=(50, 75)),
+    avg_cfg=AveragingConfig(method="adpsgd", p_init=2,
+                            warmup_full_sync_steps=4, k_sample_frac=0.25),
+    total_steps=STEPS,
+    track_variance_every=5,
+)
+
+print(f"loss: {hist.losses[0]:.3f} -> {np.mean(hist.losses[-10:]):.3f}")
+print(f"syncs: {hist.n_syncs}/{STEPS} steps "
+      f"(communication reduced {STEPS / max(1, hist.n_syncs):.1f}x "
+      f"vs full-sync SGD)")
+print(f"adaptive period trajectory: {hist.period_history}")
+print(f"variance probe S_k at syncs: "
+      f"{['%.2e' % s for s in hist.s_k[:8]]} ...")
+assert np.mean(hist.losses[-10:]) < hist.losses[0]
+print("OK")

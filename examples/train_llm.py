@@ -1,0 +1,86 @@
+"""End-to-end driver: train a transformer LM with ADPSGD for a few hundred
+steps on synthetic data and verify the loss goes down while communication
+stays a fraction of full-sync.
+
+    PYTHONPATH=src python examples/train_llm.py --size small --steps 300
+    PYTHONPATH=src python examples/train_llm.py --size 100m  --steps 200
+
+``100m`` instantiates a ~109M-parameter llama-style model (12L, d=768,
+32k vocab) — the full production path (same model code the dry-run lowers
+onto the 256-chip mesh), just on the host device.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import AveragingConfig, ModelConfig
+from repro.data.pipeline import SyntheticTokens
+from repro.launch.steps import make_loss_fn
+from repro.models import model as M
+from repro.optim import get_optimizer, make_lr_schedule
+from repro.runtime.loop import train_periodic
+
+SIZES = {
+    "tiny": dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                 d_ff=512, vocab_size=512, seq=64),
+    "small": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                  d_ff=1024, vocab_size=2048, seq=128),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=2048, vocab_size=32768, seq=256),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="small", choices=SIZES)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    s = SIZES[args.size]
+    cfg = ModelConfig(
+        name=f"llm-{args.size}", n_layers=s["n_layers"], d_model=s["d_model"],
+        n_heads=s["n_heads"], n_kv_heads=s["n_kv_heads"], d_ff=s["d_ff"],
+        vocab_size=s["vocab_size"], max_seq_len=s["seq"],
+        param_dtype="float32", compute_dtype="float32", remat=False,
+        tie_embeddings=True)
+    params0 = M.init_params(jax.random.PRNGKey(0), cfg)
+    print(f"model: {M.param_count(params0):,} params "
+          f"({cfg.n_layers}L d={cfg.d_model} vocab={cfg.vocab_size})")
+
+    data = SyntheticTokens(cfg.vocab_size, s["seq"],
+                           n_samples=args.replicas * args.batch * 64)
+    t0 = time.time()
+    hist = train_periodic(
+        loss_fn=make_loss_fn(cfg),
+        optimizer=get_optimizer("adamw"),
+        params0=params0,
+        n_replicas=args.replicas,
+        data_fn=data.batches(n_replicas=args.replicas,
+                             per_replica_batch=args.batch),
+        lr_fn=make_lr_schedule("cosine", args.lr, args.steps,
+                               warmup_steps=min(20, args.steps // 10)),
+        avg_cfg=AveragingConfig(method="adpsgd", p_init=2,
+                                warmup_full_sync_steps=8,
+                                k_sample_frac=0.2),
+        total_steps=args.steps,
+        track_variance_every=max(1, args.steps // 40),
+    )
+    dt = time.time() - t0
+    tok = args.steps * args.replicas * args.batch * s["seq"]
+    print(f"{args.steps} steps / {tok:,} tokens in {dt:.0f}s "
+          f"({tok / dt:.0f} tok/s on host)")
+    print(f"loss {hist.losses[0]:.3f} -> {np.mean(hist.losses[-20:]):.3f}")
+    print(f"syncs {hist.n_syncs}/{args.steps} "
+          f"(comm reduction {args.steps / max(1, hist.n_syncs):.1f}x); "
+          f"periods {hist.period_history[:6]} ... {hist.period_history[-3:]}")
+    assert np.mean(hist.losses[-20:]) < hist.losses[0] * 0.9, "did not learn"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Hillclimb pair B: deepseek-v2-lite-16b x train_4k (§Perf).
+VARIANT=baseline|novp|ddp  — prints roofline terms + collective census."""
+import os, sys, dataclasses
+sys.argv = [sys.argv[0]]
+from repro.launch import dryrun as D
+from repro.configs import get_config
+
+variant = os.environ.get("VARIANT", "baseline")
+run = get_config("deepseek-v2-lite-16b")
+if variant == "novp":      # pre-hillclimb-A1 (d-sharded embedding)
+    run = dataclasses.replace(run, parallelism=dataclasses.replace(
+        run.parallelism, vocab_parallel_embed=False))
+elif variant == "ddp":     # model axis as intra-group DP (A2 transplanted)
+    run = dataclasses.replace(run, parallelism=dataclasses.replace(
+        run.parallelism, plan="replica_ddp"))
+elif variant == "sp":      # sequence parallelism inside each replica group
+    run = dataclasses.replace(run, model=dataclasses.replace(
+        run.model, act_seq_axis="model"))
+rec = D.run_pair("deepseek-v2-lite-16b", "train_4k",
+                 programs=["local_step", "sync_step"], run_override=run)
+for pn, pr in rec["programs"].items():
+    r = pr["roofline"]
+    print(f"{variant:9s} {pn:11s} compute={r['compute_s']:.3e} "
+          f"mem={r['memory_s']:.3e} coll={r['collective_s']:.3e} "
+          f"dom={r['dominant']}")
+    print(f"          colls: { {k: '%.2e'%v for k,v in pr['collectives']['bytes_by_type'].items()} }")

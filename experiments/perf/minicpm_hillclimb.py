@@ -1,0 +1,22 @@
+"""Hillclimb pair D (bonus): minicpm-2b x train_4k.
+Its vocab (122753) is indivisible by 16 => the embedding cannot
+vocab-shard and the d-sharded fallback all-reduces full (B,S,V) logits.
+VARIANT=baseline|pad (vocab_pad_multiple=16 -> 122768, shardable)."""
+import os, sys, dataclasses
+sys.argv = [sys.argv[0]]
+from repro.launch import dryrun as D
+from repro.configs import get_config
+
+variant = os.environ.get("VARIANT", "baseline")
+run = get_config("minicpm-2b")
+if variant == "pad":
+    run = dataclasses.replace(run, model=dataclasses.replace(
+        run.model, vocab_pad_multiple=16))
+rec = D.run_pair("minicpm-2b", "train_4k", programs=["local_step"],
+                 run_override=run)
+for pn, pr in rec["programs"].items():
+    r = pr["roofline"]
+    print(f"{variant:9s} {pn:11s} compute={r['compute_s']:.3e} "
+          f"mem={r['memory_s']:.3e} coll={r['collective_s']:.3e} "
+          f"dom={r['dominant']}")
+    print(f"          colls: { {k: '%.2e'%v for k,v in pr['collectives']['bytes_by_type'].items()} }")

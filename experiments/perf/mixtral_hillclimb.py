@@ -1,0 +1,32 @@
+"""Hillclimb pair C: mixtral-8x22b x train_4k (fsdp plan, memory-bound).
+VARIANT=baseline|dots|bf16 — prints roofline terms."""
+import os, sys, dataclasses
+sys.argv = [sys.argv[0]]
+from repro.launch import dryrun as D
+from repro.configs import get_config
+
+variant = os.environ.get("VARIANT", "baseline")
+run = get_config("mixtral-8x22b")
+if variant == "dots":      # remat policy: keep matmul outputs (less recompute)
+    run = dataclasses.replace(run, model=dataclasses.replace(
+        run.model, remat_policy="dots"))
+elif variant == "bf16":    # bf16 parameters (halves fsdp gather + opt traffic)
+    run = dataclasses.replace(run, model=dataclasses.replace(
+        run.model, param_dtype="bfloat16"))
+elif variant == "sp":      # megatron sequence parallelism on residual stream
+    run = dataclasses.replace(run, model=dataclasses.replace(
+        run.model, act_dp_axis="data", act_seq_axis="model"))
+elif variant == "sp_bf16":  # SP + bf16 params (halve fsdp gathers)
+    run = dataclasses.replace(run, model=dataclasses.replace(
+        run.model, act_dp_axis="data", act_seq_axis="model",
+        param_dtype="bfloat16"))
+rec = D.run_pair("mixtral-8x22b", "train_4k",
+                 programs=["local_step"], run_override=run)
+for pn, pr in rec["programs"].items():
+    r = pr["roofline"]
+    print(f"{variant:9s} {pn:11s} compute={r['compute_s']:.3e} "
+          f"mem={r['memory_s']:.3e} coll={r['collective_s']:.3e} "
+          f"dom={r['dominant']}")
+    print(f"          colls: { {k: '%.2e'%v for k,v in pr['collectives']['bytes_by_type'].items()} }")
+    if pr.get("memory"):
+        print(f"          peak_bytes/dev={pr['memory']['peak_bytes']/1e9:.2f}GB")

@@ -1,0 +1,30 @@
+"""Hillclimb experiment: olmo-1b train_4k (EXPERIMENTS.md §Perf pair A).
+Runs A/B variants of the sharding plan and prints the roofline terms."""
+import os, sys, dataclasses, json
+sys.argv = [sys.argv[0]]
+from repro.launch import dryrun as D
+from repro.configs import get_config
+
+variant = os.environ.get("VARIANT", "vp")
+run = get_config("olmo-1b")
+if variant == "baseline":       # paper-faithful naive TP (pre-hillclimb)
+    run = dataclasses.replace(run, parallelism=dataclasses.replace(
+        run.parallelism, vocab_parallel_embed=False))
+elif variant == "vp":           # + vocab-parallel embedding (iter 1)
+    pass
+elif variant == "ddp":          # + model-axis-as-DP within groups (iter 2)
+    run = dataclasses.replace(run, parallelism=dataclasses.replace(
+        run.parallelism, plan="replica_ddp"))
+elif variant == "ddp_c":        # + explicit activation constraints (iter 3)
+    run = dataclasses.replace(
+        run,
+        parallelism=dataclasses.replace(run.parallelism, plan="replica_ddp"),
+        model=dataclasses.replace(run.model, act_dp_axis="model"))
+rec = D.run_pair("olmo-1b", "train_4k", programs=["local_step", "sync_step"],
+                 run_override=run)
+for pn, pr in rec["programs"].items():
+    r = pr["roofline"]
+    print(f"{variant:9s} {pn:11s} compute={r['compute_s']:.3e} "
+          f"mem={r['memory_s']:.3e} coll={r['collective_s']:.3e} "
+          f"dom={r['dominant']}")
+    print(f"          colls: { {k: '%.2e'%v for k,v in pr['collectives']['bytes_by_type'].items()} }")

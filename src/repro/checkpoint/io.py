@@ -1,0 +1,89 @@
+"""Pytree checkpointing to .npz + controller/loop state to json.
+
+The controller's adaptive state (p, C2, cnt) is part of the training state —
+restoring a run must resume the same period schedule (Algorithm 2 is
+stateful across syncs)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+SEP = "|"
+
+
+def _flatten(tree: Pytree, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{SEP}{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{SEP}#{i}" if prefix else f"#{i}"))
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Pytree:
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split(SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return jax.numpy.asarray(node)
+        if node and all(k.startswith("#") for k in node):
+            return [rebuild(node[f"#{i}"]) for i in range(len(node))]
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+def save_checkpoint(path: str, params: Pytree, *,
+                    opt_state: Optional[Pytree] = None,
+                    step: int = 0,
+                    controller_state: Optional[Dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    meta = {"step": step, "controller": controller_state or {}}
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def load_checkpoint(path: str) -> Tuple[Pytree, Optional[Pytree], Dict]:
+    with np.load(os.path.join(path, "params.npz")) as z:
+        params = _unflatten({k: z[k] for k in z.files})
+    opt_state = None
+    opt_path = os.path.join(path, "opt_state.npz")
+    if os.path.exists(opt_path):
+        with np.load(opt_path) as z:
+            opt_state = _unflatten({k: z[k] for k in z.files})
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return params, opt_state, meta
+
+
+def controller_state(ctrl) -> Dict:
+    d = {"cnt": ctrl.cnt, "n_syncs": ctrl.n_syncs}
+    for attr in ("p", "c2", "n_c2"):
+        if hasattr(ctrl, attr):
+            d[attr] = getattr(ctrl, attr)
+    return d
+
+
+def restore_controller(ctrl, state: Dict) -> None:
+    ctrl.cnt = state.get("cnt", 0)
+    for attr in ("p", "c2", "n_c2"):
+        if attr in state and hasattr(ctrl, attr):
+            setattr(ctrl, attr, state[attr])

@@ -1,0 +1,35 @@
+"""Whisper-medium [audio] — enc-dec, conv frontend (stub) [arXiv:2212.04356].
+
+Decoder tower per the assignment (24L, d=1024, 16H MHA, d_ff=4096, GELU,
+LayerNorm, learned positions); 24-layer encoder over stubbed post-conv
+frame embeddings (1500 frames = 30 s).  Cross-attention in every decoder
+layer."""
+from repro.configs.base import (EncoderConfig, ModelConfig, ParallelismPlan,
+                                RunConfig, register)
+
+
+@register("whisper-medium")
+def cfg() -> RunConfig:
+    return RunConfig(
+        model=ModelConfig(
+            name="whisper-medium",
+            family="audio",
+            source="arXiv:2212.04356",
+            n_layers=24,
+            d_model=1024,
+            n_heads=16,
+            n_kv_heads=16,
+            d_ff=4096,
+            vocab_size=51865,
+            max_seq_len=32768,
+            norm_type="layernorm",
+            mlp_type="gelu",
+            pos_type="learned",
+            encoder=EncoderConfig(n_layers=24, n_heads=16, n_frames=1500),
+            tie_embeddings=True,       # whisper ties decoder embed / head
+        ),
+        parallelism=ParallelismPlan(plan="replica_dp"),
+        optimizer="adamw",
+        learning_rate=1e-3,
+        lr_schedule="cosine",
+    )

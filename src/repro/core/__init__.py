@@ -1,0 +1,8 @@
+from repro.core.averaging import (  # noqa: F401
+    stack_replicas, replica_mean, parameter_variance, sync_replicas,
+    make_local_step, make_full_step, group_sync, n_replicas,
+)
+from repro.core.controller import (  # noqa: F401
+    ADPSGDController, ConstantPeriodController, FullSyncController,
+    DecreasingPeriodController, HierarchicalADPSGDController, make_controller,
+)

@@ -1,0 +1,151 @@
+"""The paper's core: periodic parameter averaging over a stacked replica axis.
+
+Representation
+--------------
+``W`` is a parameter pytree whose every leaf carries a leading **replica
+axis** of size R — one local-SGD trajectory per replica (paper: one per
+node).  On the production mesh this axis is sharded over the ``data`` (or
+``pod``) mesh axis, so:
+
+* ``local_step``  compiles with **zero collectives** on the replica axis —
+  each replica advances independently on its own batch shard (Algorithm 1
+  lines 3–4 / Algorithm 2 lines 5–7);
+* ``sync_replicas`` is the only program with a replica-axis collective: the
+  parameter mean (one all-reduce) plus the paper's variance probe
+  ``S_k = (1/n) Σ_i ||w̄ − w_i||²`` (Algorithm 2 lines 10–11), which reuses
+  the already-materialized deviations — a scalar psum beyond the mean.
+
+This is the TPU-native adaptation of the paper's NCCL ring all-reduce
+formulation (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer
+
+Pytree = Any
+LossFn = Callable[[Pytree, Dict[str, jnp.ndarray]], Tuple[jnp.ndarray, Dict]]
+
+
+def stack_replicas(tree: Pytree, n: int) -> Pytree:
+    """Replicate a single-model pytree into n identical local trajectories."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape) + 0, tree)
+
+
+def replica_mean(W: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), W)
+
+
+def n_replicas(W: Pytree) -> int:
+    return jax.tree_util.tree_leaves(W)[0].shape[0]
+
+
+def parameter_variance(W: Pytree) -> jnp.ndarray:
+    """Var[W_k] = (1/n) Σ_i ||W̄ − w_i||²  (paper Eq. 7), summed over the
+    entire parameter vector, in float32."""
+    def leaf_var(x):
+        xf = x.astype(jnp.float32)
+        mean = jnp.mean(xf, axis=0, keepdims=True)
+        return jnp.sum(jnp.square(xf - mean)) / x.shape[0]
+    return sum(jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(leaf_var, W)))
+
+
+def make_local_step(loss_fn: LossFn, optimizer: Optimizer):
+    """Returns step(W, opt_state, batch, lr) -> (W, opt_state, metrics).
+
+    ``batch`` leaves carry the replica axis (R, per_replica_batch, ...).
+    vmap over the replica axis keeps trajectories independent; on the mesh
+    this axis is sharded so vmap lanes live on distinct replica groups.
+    """
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def one_replica(params, opt_state, batch, lr):
+        (loss, aux), grads = grad_fn(params, batch)
+        new_params, new_state = optimizer.update(grads, opt_state, params, lr)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree_util.tree_leaves(grads)))
+        return new_params, new_state, {"loss": loss, "grad_norm": gnorm, **aux}
+
+    def step(W, opt_state, batch, lr):
+        new_W, new_state, metrics = jax.vmap(
+            one_replica, in_axes=(0, 0, 0, None))(W, opt_state, batch, lr)
+        metrics = jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), metrics)
+        return new_W, new_state, metrics
+
+    return step
+
+
+def sync_replicas(W: Pytree, opt_state: Optional[Pytree] = None, *,
+                  sync_momentum: bool = False,
+                  use_kernel: bool = False,
+                  ) -> Tuple[Pytree, Optional[Pytree], jnp.ndarray]:
+    """Average the replicas (Algorithm 2 line 10) and compute the variance
+    probe S_k (line 11).  Returns (W_synced, opt_state, S_k)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        leaves, treedef = jax.tree_util.tree_flatten(W)
+        outs, sks = [], []
+        for x in leaves:
+            mean, sk = kops.param_mean_and_sqdev(x)
+            outs.append(jnp.broadcast_to(mean[None], x.shape).astype(x.dtype))
+            sks.append(sk)
+        W_new = jax.tree_util.tree_unflatten(treedef, outs)
+        S_k = sum(sks) / jax.tree_util.tree_leaves(W)[0].shape[0]
+    else:
+        def mean_leaf(x):
+            return jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+        means = jax.tree_util.tree_map(mean_leaf, W)
+        S_k = sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32) - m)) / x.shape[0]
+            for x, m in zip(jax.tree_util.tree_leaves(W),
+                            jax.tree_util.tree_leaves(means)))
+        W_new = jax.tree_util.tree_map(
+            lambda x, m: jnp.broadcast_to(m, x.shape).astype(x.dtype), W, means)
+    if opt_state is not None and sync_momentum:
+        opt_state = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                jnp.mean(x.astype(jnp.float32), 0, keepdims=True),
+                x.shape).astype(x.dtype), opt_state)
+    return W_new, opt_state, S_k
+
+
+def make_full_step(loss_fn: LossFn, optimizer: Optimizer):
+    """FULLSGD baseline: gradients are averaged across replicas every step
+    (equivalent to CPSGD with p=1 applied to gradients before the update,
+    i.e. vanilla synchronous data-parallel SGD)."""
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(W, opt_state, batch, lr):
+        def one(params, batch):
+            return grad_fn(params, batch)
+        (loss, aux), grads = jax.vmap(one)(W, batch)
+        g_mean = jax.tree_util.tree_map(
+            lambda g: jnp.mean(g.astype(jnp.float32), axis=0,
+                               keepdims=True).astype(g.dtype), grads)
+        g_bcast = jax.tree_util.tree_map(
+            lambda g, w: jnp.broadcast_to(g, w.shape), g_mean, W)
+        new_W, new_state = jax.vmap(
+            optimizer.update, in_axes=(0, 0, 0, None))(g_bcast, opt_state, W, lr)
+        metrics = {"loss": jnp.mean(loss),
+                   **{k: jnp.mean(v) for k, v in aux.items()}}
+        return new_W, new_state, metrics
+
+    return step
+
+
+def group_sync(W: Pytree, group_size: int) -> Pytree:
+    """Hierarchical (beyond-paper): average only within contiguous groups of
+    ``group_size`` replicas (= one pod).  Cross-group averaging is left to
+    the outer adaptive schedule."""
+    def leaf(x):
+        R = x.shape[0]
+        g = x.reshape(R // group_size, group_size, *x.shape[1:])
+        m = jnp.mean(g.astype(jnp.float32), axis=1, keepdims=True)
+        return jnp.broadcast_to(m, g.shape).reshape(x.shape).astype(x.dtype)
+    return jax.tree_util.tree_map(leaf, W)

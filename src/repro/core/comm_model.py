@@ -1,0 +1,78 @@
+"""Analytic communication model — reproduces the paper's execution-time
+figures (Fig 4c/5c/6, §IV) on hardware we don't have, and the TPU roofline
+collective term.
+
+The paper's setup: 16 nodes, ring all-reduce (NCCL / bandwidth-optimal
+Patarasuk-Yuan), 100 Gbps InfiniBand vs. throttled 10 Gbps.  A ring
+all-reduce of D bytes moves 2·(n−1)/n·D per node.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+GBPS_100 = 100e9 / 8     # bytes/s
+GBPS_10 = 10e9 / 8
+LATENCY_S = 5e-6         # per collective, per hop
+
+
+@dataclass(frozen=True)
+class CommStats:
+    bytes_per_node: float
+    n_events: int
+    time_s: float
+
+
+def ring_allreduce_bytes(n_params: int, n_nodes: int, bytes_per_el: int = 4) -> float:
+    return 2.0 * (n_nodes - 1) / n_nodes * n_params * bytes_per_el
+
+
+def method_comm(method: str, n_params: int, n_nodes: int, total_steps: int,
+                n_syncs: int, bandwidth: float, qsgd_bits: int = 8) -> CommStats:
+    """Total communication for a training run, per node."""
+    lat = LATENCY_S * 2 * (n_nodes - 1)
+    if method in ("fullsgd",):
+        per = ring_allreduce_bytes(n_params, n_nodes)
+        ev = total_steps
+    elif method in ("cpsgd", "adpsgd", "decreasing"):
+        per = ring_allreduce_bytes(n_params, n_nodes)
+        ev = n_syncs
+    elif method == "qsgd":
+        # 1 byte per component (8-bit levels) + per-tensor norms (negligible);
+        # quantized values are not ring-reducible -> gather+broadcast; the
+        # paper charges 1/4 of FULLSGD bytes, latency NOT reduced.
+        per = ring_allreduce_bytes(n_params, n_nodes) * qsgd_bits / 32.0
+        ev = total_steps
+    else:
+        raise ValueError(method)
+    t = ev * (per / bandwidth + lat)
+    return CommStats(per, ev, t)
+
+
+def speedup_vs_fullsgd(method: str, n_params: int, n_nodes: int,
+                       total_steps: int, n_syncs: int, step_compute_s: float,
+                       bandwidth: float) -> float:
+    """Modeled wall-clock speedup of `method` over FULLSGD (paper Fig 4c)."""
+    full = method_comm("fullsgd", n_params, n_nodes, total_steps,
+                       total_steps, bandwidth)
+    this = method_comm(method, n_params, n_nodes, total_steps, n_syncs,
+                       bandwidth)
+    t_full = total_steps * step_compute_s + full.time_s
+    t_this = total_steps * step_compute_s + this.time_s
+    return t_full / t_this
+
+
+# --- TPU roofline constants (v5e-class targets; system prompt) -------------
+PEAK_FLOPS_BF16 = 197e12         # per chip
+HBM_BW = 819e9                   # bytes/s per chip
+ICI_BW = 50e9                    # bytes/s per link (~per-axis usable)
+
+
+def roofline_terms(hlo_flops: float, hlo_bytes: float, collective_bytes: float,
+                   n_chips: int, ici_links: int = 1) -> dict:
+    c = hlo_flops / (n_chips * PEAK_FLOPS_BF16)
+    m = hlo_bytes / (n_chips * HBM_BW)
+    x = collective_bytes / (n_chips * ICI_BW * ici_links)
+    dom = max((c, "compute"), (m, "memory"), (x, "collective"))
+    return {"compute_s": c, "memory_s": m, "collective_s": x,
+            "dominant": dom[1], "bound_s": dom[0]}

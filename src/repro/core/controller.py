@@ -1,0 +1,178 @@
+"""Host-side averaging-period controllers.
+
+The controller decides, each iteration, whether the next dispatched program
+is the (collective-free) local step or the sync step — and adapts the period
+from the measured variance probe S_k.  This is Algorithm 2 of the paper plus
+the baselines it compares against.  Controllers are plain python: both
+programs are pre-compiled and dispatch is asynchronous, so the control
+decision is off the critical path (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.configs.base import AveragingConfig
+
+
+class PeriodController:
+    """Base: call ``sync_now(k)`` once per iteration k; if it returns True,
+    run the sync program and feed the measured S_k back via
+    ``observe(k, lr, S_k)``."""
+
+    name = "base"
+
+    def __init__(self, cfg: AveragingConfig, total_steps: int):
+        self.cfg = cfg
+        self.total_steps = total_steps
+        self.cnt = 0
+        self.sync_steps: List[int] = []
+        self.period_history: List[int] = []
+
+    @property
+    def period(self) -> int:
+        raise NotImplementedError
+
+    def sync_now(self, k: int) -> bool:
+        if k < self.cfg.warmup_full_sync_steps:
+            self._record(k)
+            return True
+        self.cnt += 1
+        if self.cnt >= self.period:
+            self.cnt = 0
+            self._record(k)
+            return True
+        return False
+
+    def _record(self, k: int):
+        self.sync_steps.append(k)
+        self.period_history.append(self.period)
+
+    def observe(self, k: int, lr: float, s_k: float) -> None:
+        pass
+
+    @property
+    def n_syncs(self) -> int:
+        return len(self.sync_steps)
+
+    def mean_period(self, total_steps: Optional[int] = None) -> float:
+        t = total_steps or self.total_steps
+        return t / max(1, self.n_syncs)
+
+
+class FullSyncController(PeriodController):
+    """FULLSGD: synchronize every iteration (p = 1)."""
+
+    name = "fullsgd"
+
+    @property
+    def period(self) -> int:
+        return 1
+
+
+class ConstantPeriodController(PeriodController):
+    """CPSGD (Algorithm 1): constant period p."""
+
+    name = "cpsgd"
+
+    @property
+    def period(self) -> int:
+        return self.cfg.p_const
+
+
+class DecreasingPeriodController(PeriodController):
+    """Wang & Joshi's decreasing schedule (paper §V-B — shown harmful):
+    period p0 for the first half of training, p1 afterwards."""
+
+    name = "decreasing"
+
+    def __init__(self, cfg: AveragingConfig, total_steps: int):
+        super().__init__(cfg, total_steps)
+        self.switch = total_steps // 2
+        self._k = 0
+
+    def sync_now(self, k: int) -> bool:
+        self._k = k
+        return super().sync_now(k)
+
+    @property
+    def period(self) -> int:
+        return self.cfg.decreasing_p0 if self._k < self.switch \
+            else self.cfg.decreasing_p1
+
+
+class ADPSGDController(PeriodController):
+    """Algorithm 2 — the paper's contribution.
+
+    * iterations < warmup_full_sync_steps: period 1 (paper: first epoch).
+    * first K_s iterations: period = p_init while sampling
+      C2 = RunningAverage(S_k / γ_k) at each sync (line 14).
+    * afterwards: p += 1 when S_k < 0.7·γ_k·C2, p −= 1 when
+      S_k > 1.3·γ_k·C2 (lines 16–19): keeps the pre-sync parameter variance
+      pinned proportional to the learning rate (Eq. 16) — the condition that
+      preserves the O(1/√(MK)) rate with the least communication.
+    """
+
+    name = "adpsgd"
+
+    def __init__(self, cfg: AveragingConfig, total_steps: int):
+        super().__init__(cfg, total_steps)
+        self.p = cfg.p_init
+        self.c2 = 0.0
+        self.n_c2 = 0
+        self.k_sample = int(cfg.k_sample_frac * total_steps)
+
+    @property
+    def period(self) -> int:
+        return self.p
+
+    def observe(self, k: int, lr: float, s_k: float) -> None:
+        if k < self.cfg.warmup_full_sync_steps:
+            return
+        if k < self.k_sample:
+            self.n_c2 += 1
+            self.c2 += (s_k / max(lr, 1e-12) - self.c2) / self.n_c2
+            return
+        if self.n_c2 == 0:      # degenerate: no sampling window
+            self.n_c2 = 1
+            self.c2 = s_k / max(lr, 1e-12)
+            return
+        target = lr * self.c2
+        if s_k < self.cfg.lower * target:
+            self.p = min(self.p + 1, self.cfg.p_max)
+        elif s_k > self.cfg.upper * target:
+            self.p = max(self.p - 1, self.cfg.p_min)
+
+
+class HierarchicalADPSGDController(ADPSGDController):
+    """Beyond-paper: two-level schedule for multi-pod meshes.  The inner
+    (in-pod, fast ICI) sync runs at a small constant period ``inner_period``;
+    the outer (cross-pod, slow link) sync is the adaptive one.  ``sync_now``
+    refers to the *outer* sync; query ``inner_sync_now`` separately."""
+
+    name = "hier_adpsgd"
+
+    def __init__(self, cfg: AveragingConfig, total_steps: int,
+                 inner_period: int = 1):
+        super().__init__(cfg, total_steps)
+        self.inner_period = inner_period
+        self._inner_cnt = 0
+        self.inner_sync_steps: List[int] = []
+
+    def inner_sync_now(self, k: int) -> bool:
+        self._inner_cnt += 1
+        if self._inner_cnt >= self.inner_period:
+            self._inner_cnt = 0
+            self.inner_sync_steps.append(k)
+            return True
+        return False
+
+
+def make_controller(cfg: AveragingConfig, total_steps: int) -> PeriodController:
+    return {
+        "adpsgd": ADPSGDController,
+        "cpsgd": ConstantPeriodController,
+        "fullsgd": FullSyncController,
+        "qsgd": FullSyncController,       # QSGD communicates every step
+        "decreasing": DecreasingPeriodController,
+    }[cfg.method](cfg, total_steps)

@@ -1,0 +1,81 @@
+"""QSGD baseline (Alistarh et al. 2017) — stochastic gradient quantization.
+
+The paper compares ADPSGD against 8-bit QSGD (§IV: "QSGD uses 8 bits to
+store each gradient component, its communication data size is 1/4 of
+FULLSGD and 2x of our ADPSGD").  Every iteration each replica quantizes its
+gradient, "transmits" it (simulated: quantize→dequantize round-trip), and
+all replicas apply the averaged dequantized gradient — trajectories stay
+identical, as with a parameter server.
+
+``quantize``/``dequantize`` reference implementations live here; the
+bandwidth-bound inner loop has a Pallas kernel (repro/kernels/qsgd_quant.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer
+
+Pytree = Any
+
+
+def quantize(v: jnp.ndarray, key, bits: int = 8) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """QSGD stochastic quantization of one tensor.
+
+    q_i = ||v||₂ · sgn(v_i) · ξ_i / s  with s = 2^(bits−1) − 1 levels and
+    ξ_i ∈ {⌊|v_i|·s/‖v‖⌋, ⌈…⌉} chosen stochastically so E[q] = v.
+    Returns (levels int8, norm scalar f32).
+    """
+    s = (1 << (bits - 1)) - 1
+    vf = v.astype(jnp.float32)
+    norm = jnp.sqrt(jnp.sum(jnp.square(vf)))
+    scaled = jnp.where(norm > 0, jnp.abs(vf) / norm * s, 0.0)
+    floor = jnp.floor(scaled)
+    prob = scaled - floor
+    rnd = jax.random.uniform(key, v.shape)
+    mag = floor + (rnd < prob).astype(jnp.float32)
+    levels = (jnp.sign(vf) * mag).astype(jnp.int8)
+    return levels, norm
+
+
+def dequantize(levels: jnp.ndarray, norm: jnp.ndarray, bits: int = 8,
+               dtype=jnp.float32) -> jnp.ndarray:
+    s = (1 << (bits - 1)) - 1
+    return (levels.astype(jnp.float32) * (norm / s)).astype(dtype)
+
+
+def quantize_pytree(grads: Pytree, key, bits: int = 8) -> Pytree:
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, g in zip(keys, leaves):
+        lv, nm = quantize(g, k, bits)
+        out.append(dequantize(lv, nm, bits, g.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_qsgd_step(loss_fn, optimizer: Optimizer, bits: int = 8):
+    """Full-communication step with quantized gradients.  Signature matches
+    the other steps plus an rng key: step(W, opt, batch, lr, key)."""
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(W, opt_state, batch, lr, key):
+        (loss, aux), grads = jax.vmap(grad_fn)(W, batch)
+        R = jax.tree_util.tree_leaves(W)[0].shape[0]
+        keys = jax.random.split(key, R)
+        q = jax.vmap(lambda g, k: quantize_pytree(g, k, bits))(grads, keys)
+        g_mean = jax.tree_util.tree_map(
+            lambda g: jnp.mean(g.astype(jnp.float32), axis=0, keepdims=True),
+            q)
+        g_bcast = jax.tree_util.tree_map(
+            lambda g, w: jnp.broadcast_to(g, w.shape).astype(w.dtype), g_mean, W)
+        new_W, new_state = jax.vmap(
+            optimizer.update, in_axes=(0, 0, 0, None))(g_bcast, opt_state, W, lr)
+        metrics = {"loss": jnp.mean(loss),
+                   **{k: jnp.mean(v) for k, v in aux.items()}}
+        return new_W, new_state, metrics
+
+    return step

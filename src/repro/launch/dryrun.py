@@ -1,0 +1,371 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks device count on first init.
+# The 512 placeholder host devices exist ONLY for the dry-run (multi-pod
+# production mesh is 2x16x16); smoke tests and benches see 1 device.
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+combination lowers + compiles on the production mesh, and extract the
+roofline terms from the compiled artifact.
+
+Per pair we lower the program the shape's kind dictates:
+  train_4k     -> local_step + sync_step (the paper's two programs) and
+                  full_step (FULLSGD baseline)
+  prefill_32k  -> prefill_step
+  decode_*     -> serve_step (one token against a full KV cache / SSM state)
+
+Outputs one JSON record per (arch, shape, mesh, program) under
+experiments/dryrun/, consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core.comm_model import roofline_terms
+from repro.launch import sharding as sh
+from repro.launch import specs as sp
+from repro.launch import steps as st
+from repro.launch.mesh import make_production_mesh, n_replicas_for, replica_axes_for
+from repro.models import model as M
+
+ARCHS = [
+    "qwen2-vl-2b", "xlstm-350m", "whisper-medium", "qwen2.5-14b", "olmo-1b",
+    "glm4-9b", "mixtral-8x22b", "jamba-1.5-large-398b",
+    "deepseek-v2-lite-16b", "minicpm-2b",
+]
+
+# long_500k needs sub-quadratic attention (DESIGN.md §5)
+LONG_OK = {"xlstm-350m", "jamba-1.5-large-398b", "mixtral-8x22b"}
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_COLL = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\][^=]*?\b"
+    r"(all-reduce-start|all-gather-start|reduce-scatter|all-to-all|"
+    r"collective-permute-start|all-reduce|all-gather|collective-permute)\b")
+_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS2 = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8": 1}
+
+
+def parse_collectives(hlo: str) -> Dict[str, Any]:
+    """Sum per-chip collective traffic from post-SPMD HLO.  Shapes printed
+    are per-partition; traffic factors per ring algorithm (DESIGN.md §7)."""
+    by_type: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    for line in hlo.splitlines():
+        mm = _COLL.search(line)
+        if not mm:
+            continue
+        dtype, dims, op = mm.groups()
+        op = op.replace("-start", "")
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        nbytes = _DTYPE_BYTES.get(dtype, _DTYPE_BYTES.get(dtype[:3], 4))
+        size = 1
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        br = size * nbytes
+        g = _GROUPS.search(line)
+        if g:
+            n = int(g.group(2))
+        else:
+            g2 = _GROUPS2.search(line)
+            n = len(g2.group(1).split(",")) if g2 else 2
+        if n <= 1:
+            continue
+        factor = {"all-reduce": 2.0 * (n - 1) / n,
+                  "all-gather": (n - 1) / n,
+                  "reduce-scatter": float(n - 1),
+                  "all-to-all": (n - 1) / n,
+                  "collective-permute": 1.0}[op]
+        by_type[op] = by_type.get(op, 0.0) + br * factor
+        count[op] = count.get(op, 0) + 1
+    return {"bytes_by_type": by_type, "count_by_type": count,
+            "total_bytes": sum(by_type.values())}
+
+
+def analyze(compiled, n_chips: int) -> Dict[str, Any]:
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    coll = parse_collectives(compiled.as_text())
+    flops = float(cost.get("flops", 0.0))          # per-chip (post-SPMD)
+    byts = float(cost.get("bytes accessed", 0.0))
+    rec = {
+        "flops_per_chip": flops,
+        "hbm_bytes_per_chip": byts,
+        "collective_bytes_per_chip": coll["total_bytes"],
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.temp_size_in_bytes),
+        } if mem else None,
+        "roofline": roofline_terms(
+            flops * n_chips, byts * n_chips,
+            coll["total_bytes"] * n_chips, n_chips),
+    }
+    return rec
+
+
+def _lower_compile(fn, in_shardings, args, donate=()):
+    t0 = time.time()
+    jitted = jax.jit(fn, in_shardings=in_shardings,
+                     donate_argnums=donate)
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return compiled, {"lower_s": t1 - t0, "compile_s": t2 - t1}
+
+
+# ---------------------------------------------------------------------------
+# Scan-aware cost extrapolation.
+#
+# XLA's HloCostAnalysis visits a while-loop body ONCE — a lax.scan over G
+# layer groups under-counts flops/bytes/collectives by ~G.  The full
+# (scanned) program is still compiled to prove lowering + memory; the cost
+# terms are extrapolated EXACTLY from two small *unrolled* variants with
+# prefix+P and prefix+2P layers: cost(L) is affine in L, so
+#   cost(n_layers) = c1 + (c2 - c1) * (n_layers - L1) / (L2 - L1).
+# Residual caveat (documented in EXPERIMENTS.md): recurrences that scan
+# *within* a layer (sLSTM over time, mLSTM over chunks) remain under-counted
+# in the compute term; the roofline table carries MODEL_FLOPS as the floor.
+# ---------------------------------------------------------------------------
+
+
+def _affine_extrapolate(a1: Dict, a2: Dict, L1: int, L2: int, L: int) -> Dict:
+    t = (L - L1) / (L2 - L1)
+
+    def ext(v1, v2):
+        return v1 + (v2 - v1) * t
+
+    out = {
+        "flops_per_chip": ext(a1["flops_per_chip"], a2["flops_per_chip"]),
+        "hbm_bytes_per_chip": ext(a1["hbm_bytes_per_chip"],
+                                  a2["hbm_bytes_per_chip"]),
+        "collective_bytes_per_chip": ext(a1["collective_bytes_per_chip"],
+                                         a2["collective_bytes_per_chip"]),
+    }
+    by1 = a1["collectives"]["bytes_by_type"]
+    by2 = a2["collectives"]["bytes_by_type"]
+    out["collectives"] = {
+        "bytes_by_type": {k: ext(by1.get(k, 0.0), by2.get(k, 0.0))
+                          for k in set(by1) | set(by2)},
+        "count_by_type": a2["collectives"]["count_by_type"],
+        "total_bytes": out["collective_bytes_per_chip"],
+    }
+    return out
+
+
+def _corrected_analysis(run, shape_kind: str, prog: str, mesh, n_chips: int,
+                        R, rep_axes) -> Optional[Dict[str, Any]]:
+    cfg = run.model
+    g = cfg.scan_grouping()
+    if g is None:
+        return None
+    prefix, P, G = g
+    L1, L2 = prefix + P, prefix + 2 * P
+    if L2 >= cfg.n_layers:
+        return None
+    small = []
+    for L in (L1, L2):
+        cfg_s = dataclasses.replace(cfg, n_layers=L, scan_layers=False)
+        run_s = dataclasses.replace(run, model=cfg_s)
+        compiled = _compile_program(run_s, shape_kind, prog, mesh, R, rep_axes)
+        small.append(analyze(compiled, n_chips))
+    return _affine_extrapolate(small[0], small[1], L1, L2, cfg.n_layers)
+
+
+def _compile_program(run, shape_kind: str, prog: str, mesh, R, rep_axes):
+    """Build + compile one program for (possibly layer-reduced) run."""
+    cfg = run.model
+    shape = _CURRENT_SHAPE[0]
+    plan = run.parallelism
+    if shape_kind == "train":
+        fns = st.make_steps(run)
+        W = sp.abstract_params(cfg, n_replicas=R)
+        opt_abs = sp.abstract_opt_state(fns["optimizer"], W, stacked=True)
+        pspec = sh.param_specs(cfg, W, mesh, plan, replica_axes=rep_axes,
+                               stacked=True)
+        ospec = sh.opt_specs(cfg, opt_abs, pspec, mesh, plan, rep_axes,
+                             stacked=True)
+        batch, bspec = sp.train_batch_specs(cfg, shape, R, plan.plan,
+                                            replica_axes=rep_axes)
+        lr = jax.ShapeDtypeStruct((), jnp.float32)
+        in_sh = (sh.named(mesh, pspec), sh.named(mesh, ospec),
+                 sh.named(mesh, bspec), NamedSharding(mesh, P()))
+        if prog == "sync_step":
+            c, _ = _lower_compile(fns["sync_step"], in_sh[:2], (W, opt_abs),
+                                  donate=(0, 1))
+        else:
+            c, _ = _lower_compile(fns[prog], in_sh, (W, opt_abs, batch, lr),
+                                  donate=(0, 1))
+        return c
+    if shape_kind == "prefill":
+        prefill = st.make_prefill_step(cfg)
+        params = sp.abstract_params(cfg)
+        pspec = sh.param_specs(cfg, params, mesh, plan)
+        batch, bspec = sp.prefill_batch_specs(cfg, shape, mesh)
+        c, _ = _lower_compile(prefill, (sh.named(mesh, pspec),
+                                        sh.named(mesh, bspec)),
+                              (params, batch))
+        return c
+    raise ValueError(shape_kind)
+
+
+_CURRENT_SHAPE = [None]
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             programs: Optional[list] = None,
+             run_override=None, correct: bool = True) -> Dict[str, Any]:
+    run = run_override or get_config(arch)
+    cfg = run.model
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    plan = run.parallelism
+    rep_axes = replica_axes_for(plan.plan, multi_pod)
+    R = n_replicas_for(mesh, plan.plan, multi_pod)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "plan": plan.plan, "n_replicas": R, "programs": {},
+    }
+    _CURRENT_SHAPE[0] = shape
+    with mesh:
+        if shape.kind == "train":
+            progs = programs or ["local_step", "full_step", "sync_step"]
+            for prog in progs:
+                t0 = time.time()
+                compiled = _compile_program(run, "train", prog, mesh, R,
+                                            rep_axes)
+                rec = analyze(compiled, n_chips)
+                rec["compile_s"] = time.time() - t0
+                if correct and prog != "sync_step":  # sync is exact
+                    corr = _corrected_analysis(run, "train", prog, mesh,
+                                               n_chips, R, rep_axes)
+                else:
+                    corr = None
+                if corr is not None:
+                    rec["raw_scanned"] = {
+                        k: rec[k] for k in
+                        ("flops_per_chip", "hbm_bytes_per_chip",
+                         "collective_bytes_per_chip")}
+                    rec.update(corr)
+                    rec["roofline"] = roofline_terms(
+                        corr["flops_per_chip"] * n_chips,
+                        corr["hbm_bytes_per_chip"] * n_chips,
+                        corr["collective_bytes_per_chip"] * n_chips,
+                        n_chips)
+                    rec["cost_corrected"] = True
+                record["programs"][prog] = rec
+        elif shape.kind == "prefill":
+            t0 = time.time()
+            compiled = _compile_program(run, "prefill", "prefill_step",
+                                        mesh, R, rep_axes)
+            rec = analyze(compiled, n_chips)
+            rec["compile_s"] = time.time() - t0
+            corr = _corrected_analysis(run, "prefill", "prefill_step", mesh,
+                                       n_chips, R, rep_axes) if correct \
+                else None
+            if corr is not None:
+                rec["raw_scanned"] = {
+                    k: rec[k] for k in ("flops_per_chip",
+                                        "hbm_bytes_per_chip",
+                                        "collective_bytes_per_chip")}
+                rec.update(corr)
+                rec["roofline"] = roofline_terms(
+                    corr["flops_per_chip"] * n_chips,
+                    corr["hbm_bytes_per_chip"] * n_chips,
+                    corr["collective_bytes_per_chip"] * n_chips, n_chips)
+                rec["cost_corrected"] = True
+            record["programs"]["prefill_step"] = rec
+        else:  # decode — python-loop layers, cost exact
+            serve = st.make_serve_step(cfg)
+            params = sp.abstract_params(cfg)
+            pspec = sh.param_specs(cfg, params, mesh, plan)
+            batch, bspec = sp.decode_batch_specs(cfg, shape, mesh)
+            caches = sp.abstract_caches(cfg, shape.global_batch, shape.seq_len)
+            cspec = sh.cache_specs(cfg, caches, mesh, batch=shape.global_batch)
+            in_sh = (sh.named(mesh, pspec), sh.named(mesh, bspec),
+                     sh.named(mesh, cspec))
+            compiled, t = _lower_compile(serve, in_sh, (params, batch, caches),
+                                         donate=(2,))
+            record["programs"]["serve_step"] = {
+                **analyze(compiled, n_chips), **t}
+    return record
+
+
+def pair_is_runnable(arch: str, shape_name: str) -> bool:
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        return False
+    return True
+
+
+def save_record(rec: Dict[str, Any]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    mp = rec["mesh"]
+    path = os.path.join(
+        OUT_DIR, f"{rec['arch']}__{rec['shape']}__{mp}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--programs", default=None,
+                    help="comma list, e.g. local_step,sync_step")
+    ap.add_argument("--no-correction", action="store_true",
+                    help="skip scan-cost anchor compiles (multi-pod sweep: "
+                         "the roofline table is single-pod only)")
+    args = ap.parse_args()
+    pairs = []
+    if args.all:
+        for a in ARCHS:
+            for s in INPUT_SHAPES:
+                if pair_is_runnable(a, s):
+                    pairs.append((a, s))
+    else:
+        assert args.arch and args.shape
+        pairs = [(args.arch, args.shape)]
+    progs = args.programs.split(",") if args.programs else None
+    for a, s in pairs:
+        t0 = time.time()
+        try:
+            rec = run_pair(a, s, multi_pod=args.multi_pod, programs=progs,
+                           correct=not args.no_correction)
+            path = save_record(rec)
+            for pn, pr in rec["programs"].items():
+                r = pr["roofline"]
+                print(f"OK  {a:24s} {s:12s} {pn:12s} "
+                      f"compute={r['compute_s']:.3e}s mem={r['memory_s']:.3e}s "
+                      f"coll={r['collective_s']:.3e}s dom={r['dominant']:10s} "
+                      f"[{time.time()-t0:.0f}s] -> {os.path.basename(path)}")
+        except Exception as e:  # noqa: BLE001 — a failure IS the finding
+            print(f"FAIL {a} {s}: {type(e).__name__}: {e}")
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""Sharding rules: parameter pytree -> PartitionSpec pytree.
+
+Rules are path-based (megatron-style tensor parallel over the ``model``
+axis) with divisibility guards: a dim is sharded only if the mesh axis size
+divides it, otherwise it stays replicated (GSPMD would reject the sharding
+otherwise; the roofline then shows the cost, which is hillclimb material).
+
+Plans (DESIGN.md §4):
+  replica_dp — params gain a leading replica axis sharded over data (+pod);
+  fsdp       — params additionally shard their largest replicated dim over
+               ``data``; the replica axis (if any) maps to ``pod``.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelismPlan
+
+Pytree = Any
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    # works for both Mesh and AbstractMesh
+    return dict(mesh.shape).get(name, 1)
+
+
+def _div(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+# ---------------------------------------------------------------------------
+# Base (unstacked, tensor-parallel) rules
+# ---------------------------------------------------------------------------
+
+# (path regex, callable(shape, msize) -> spec tuple over the param's own dims)
+def _rules(cfg: ModelConfig, vocab_parallel: bool = True):
+    def col(shape, m):      # shard last dim (output features)
+        return (None,) * (len(shape) - 1) + ("model" if _div(shape[-1], m) else None,)
+
+    def row(shape, m):      # shard first dim (input features)
+        return ("model" if _div(shape[0], m) else None,) + (None,) * (len(shape) - 1)
+
+    def expert(shape, m):   # (E, D, F): expert-parallel if E divides, else F
+        if _div(shape[0], m):
+            return ("model", None, None)
+        if _div(shape[-1], m):
+            return (None, None, "model")
+        return (None, None, None)
+
+    def expert_row(shape, m):  # (E, F, D)
+        if _div(shape[0], m):
+            return ("model", None, None)
+        if _div(shape[1], m):
+            return (None, "model", None)
+        return (None, None, None)
+
+    def rep(shape, m):
+        return (None,) * len(shape)
+
+    def emb(shape, m):
+        # vocab-parallel embedding (megatron): with tied embeddings the LM
+        # head contracts over d_model — vocab sharding keeps the (B,S,V)
+        # logits sharded instead of all-reduced (hillclimb #1, EXPERIMENTS
+        # §Perf).  Falls back to d_model sharding for odd vocab sizes.
+        if vocab_parallel and _div(shape[0], m):
+            return ("model", None)
+        return (None, "model" if _div(shape[1], m) else None)
+
+    return [
+        (r"embed$", emb),
+        (r"lm_head$", col),
+        (r"\bwq\|w$|\bwk\|w$|\bwv\|w$", col),
+        (r"\bwq\|b$|\bwk\|b$|\bwv\|b$", col),
+        (r"\bwo\|w$", row),
+        (r"wkv_a\|w$", rep),            # small latent projections (MLA)
+        (r"wkv_b\|w$", col),
+        (r"wq_a\|w$", rep),
+        (r"w_gate\|w$|w_up\|w$|ff_gate$|ff_up$", col),
+        (r"w_down\|w$|ff_down$", row),
+        (r"moe\|router$", rep),
+        (r"moe\|w_gate$|moe\|w_up$", expert),
+        (r"moe\|w_down$", expert_row),
+        (r"in_proj$|\bup$|\bwx$", col),
+        (r"out_proj$|\bdown$", row),
+        (r"x_proj$|A_log$|dt_proj_b$|\bD$", row),
+        (r"dt_proj_w$", col),
+        (r"conv_w$|conv_b$", col),
+        (r"w_if$|b_i$|b_f$|ogate_norm$|\br$|\bgn$", rep),
+        (r".*", rep),                   # norms, biases, scalars
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for pp in path:
+        if hasattr(pp, "key"):
+            parts.append(str(pp.key))
+        elif hasattr(pp, "idx"):
+            parts.append(f"#{pp.idx}")
+        else:
+            parts.append(str(pp))
+    return "|".join(parts)
+
+
+def base_spec(cfg: ModelConfig, path_s: str, shape: Tuple[int, ...],
+              mesh: Mesh, plan: ParallelismPlan) -> Tuple:
+    m = _axis_size(mesh, "model")
+    if plan.plan == "replica_ddp":
+        # hillclimb plan: use the 'model' axis as extra data parallelism
+        # inside each replica group (right for models too small to TP) —
+        # params fully replicated, batch sharded over 'model'.
+        return (None,) * len(shape)
+    spec: Tuple = ()
+    for pat, fn in _rules(cfg, getattr(plan, "vocab_parallel_embed", True)):
+        if re.search(pat, path_s):
+            spec = fn(shape, m)
+            break
+    if plan.plan == "fsdp":
+        d = _axis_size(mesh, "data")
+        # shard the largest still-replicated dim over 'data' (zero-3 style)
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if spec[i] is None and _div(shape[i], d) and shape[i] >= d:
+                spec = spec[:i] + ("data",) + spec[i + 1:]
+                break
+    return spec
+
+
+def _replica_spec_entry(replica_axes: Tuple[str, ...]):
+    if not replica_axes:
+        return None
+    return replica_axes if len(replica_axes) > 1 else replica_axes[0]
+
+
+def param_specs(cfg: ModelConfig, params_abs: Pytree, mesh: Mesh,
+                plan: ParallelismPlan, *, replica_axes: Tuple[str, ...] = (),
+                stacked: bool = False) -> Pytree:
+    """PartitionSpec tree for (possibly replica-stacked) params.
+    ``stacked``: leaves carry a leading replica dim (sharded over
+    ``replica_axes``, e.g. ('data',) single-pod replica_dp, ('pod','data')
+    multi-pod; replicated if replica_axes is empty)."""
+    def one(path, x):
+        ps = _path_str(path)
+        shape = x.shape[1:] if stacked else x.shape
+        spec = base_spec(cfg, ps, shape, mesh, plan)
+        if stacked:
+            spec = (_replica_spec_entry(replica_axes),) + spec
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(one, params_abs)
+
+
+def opt_specs(cfg: ModelConfig, opt_abs: Pytree, param_spec_tree: Pytree,
+              mesh: Mesh, plan: ParallelismPlan,
+              replica_axes: Tuple[str, ...] = (),
+              stacked: bool = False) -> Pytree:
+    """Optimizer state mirrors parameter sharding (buffers have identical
+    shapes); scalars (step counters) are replicated."""
+    flat_params = {
+        _path_str(p): s for p, s in
+        jax.tree_util.tree_flatten_with_path(param_spec_tree)[0]}
+
+    def one(path, x):
+        ps = _path_str(path)
+        # momentum trees have structure {m: <params-tree>}: strip the
+        # leading state key and reuse the matching param's spec directly
+        inner = ps.split("|", 1)[1] if "|" in ps else ps
+        if inner in flat_params and flat_params[inner] is not None:
+            return flat_params[inner]
+        shape = x.shape[1:] if stacked else x.shape
+        if len(shape) == 0:
+            if stacked and x.ndim == 1:   # replicated step counter per lane
+                return P(_replica_spec_entry(replica_axes))
+            return P()
+        spec = base_spec(cfg, ps, shape, mesh, plan)
+        if stacked:
+            spec = (_replica_spec_entry(replica_axes),) + spec
+        return P(*spec)
+    return jax.tree_util.tree_map_with_path(one, opt_abs)
+
+
+def cache_specs(cfg: ModelConfig, caches_abs: Pytree, mesh: Mesh, *,
+                batch: int) -> Pytree:
+    """KV caches / SSM states for serving.  Batch dim shards over 'data'
+    when divisible; otherwise (long-context B=1) the sequence dim shards
+    over 'data' (flash-decoding style) and heads/channels over 'model'."""
+    d = _axis_size(mesh, "data")
+    m = _axis_size(mesh, "model")
+    batch_shardable = _div(batch, d)
+
+    def one(path, x):
+        ps = _path_str(path)
+        if x.ndim == 0 or ps.endswith("index"):
+            return P()
+        b_ax = "data" if batch_shardable else None
+        if ps.endswith("|k") or ps.endswith("|v"):      # (B,S,K,dh)
+            s_ax = None if batch_shardable else "data"
+            if not _div(x.shape[1], d):
+                s_ax = None
+            h_ax = "model" if _div(x.shape[2], m) else None
+            return P(b_ax, s_ax, h_ax, None)
+        if ps.endswith("|pos"):                          # (B,S)
+            s_ax = None if batch_shardable else ("data" if _div(x.shape[1], d) else None)
+            return P(b_ax, s_ax)
+        if ps.endswith("|ckv") or ps.endswith("|kpe"):   # (B,S,r) MLA latent
+            s_ax = None if batch_shardable else ("data" if _div(x.shape[1], d) else None)
+            return P(b_ax, s_ax, None)
+        if ps.endswith("|ssm"):                          # (B,Di,N)
+            return P(b_ax, "model" if _div(x.shape[1], m) else None, None)
+        if ps.endswith("|conv"):                         # (B,K-1,Di)
+            return P(b_ax, None, "model" if _div(x.shape[2], m) else None)
+        if ps.endswith("|C"):                            # mlstm (B,H,dh,dh)
+            return P(b_ax, "model" if _div(x.shape[1], m) else None, None, None)
+        if ps.endswith("|n") or ps.endswith("|m"):       # (B,H,dh)/(B,H)
+            h_ax = "model" if (x.ndim > 1 and _div(x.shape[1], m)) else None
+            return P(*((b_ax, h_ax) + (None,) * (x.ndim - 2)))
+        if x.ndim >= 2:                                  # slstm (B,D) etc.
+            return P(b_ax, "model" if _div(x.shape[1], m) else None,
+                     *(None,) * (x.ndim - 2))
+        return P(b_ax)
+    return jax.tree_util.tree_map_with_path(one, caches_abs)
+
+
+def named(mesh: Mesh, spec_tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,124 @@
+"""Abstract input specs (ShapeDtypeStruct stand-ins) + their shardings for
+every (architecture x input shape) pair — no device allocation, weak-type
+correct, shardable.  This is what the dry-run lowers against."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, RunConfig
+
+Pytree = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, n_replicas: int,
+                      plan: str = "replica_dp",
+                      replica_axes: Tuple[str, ...] = None,
+                      ) -> Tuple[Pytree, Pytree]:
+    """Replica-stacked training batch: (specs, partition-specs).
+    Batch layout: leaves carry (R, per_replica_batch, ...).  The leading dim
+    shards over ``replica_axes`` (the mesh axes the plan assigns to
+    replicas); within a replica group the batch shards over 'data' (fsdp)
+    or 'model' (replica_ddp)."""
+    R = n_replicas
+    b = max(1, shape.global_batch // R)
+    S = shape.seq_len
+    if replica_axes is None:            # legacy heuristic
+        replica_axes = ("pod", "data") if R > 16 else (
+            ("data",) if R > 1 else ())
+    rep_ax: Any = (None if not replica_axes else
+                   (replica_axes if len(replica_axes) > 1 else replica_axes[0]))
+    dp_ax = None
+    if plan == "fsdp":
+        dp_ax = "data"                  # sync-DP inside each pod group
+    elif plan == "replica_ddp" and b % 16 == 0:
+        dp_ax = "model"                 # DP-within-group hillclimb plan
+    batch: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if cfg.vision is not None:
+        Pv = cfg.vision.n_patches
+        St = S - Pv
+        batch["tokens"] = _sds((R, b, St), jnp.int32)
+        batch["vision_embeds"] = _sds((R, b, Pv, cfg.d_model), jnp.bfloat16)
+        batch["mrope_pos"] = _sds((R, 3, b, S), jnp.int32)
+        specs["tokens"] = P(rep_ax, dp_ax, None)
+        specs["vision_embeds"] = P(rep_ax, dp_ax, None, None)
+        specs["mrope_pos"] = P(rep_ax, None, dp_ax, None)
+    else:
+        batch["tokens"] = _sds((R, b, S), jnp.int32)
+        specs["tokens"] = P(rep_ax, dp_ax, None)
+    if cfg.encoder is not None:
+        T = cfg.encoder.n_frames
+        batch["frames"] = _sds((R, b, T, cfg.d_model), jnp.bfloat16)
+        specs["frames"] = P(rep_ax, dp_ax, None, None)
+    return batch, specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                        ) -> Tuple[Pytree, Pytree]:
+    B, S = shape.global_batch, shape.seq_len
+    d = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+    b_ax = "data" if B % d == 0 and B >= d else None
+    batch: Dict[str, Any] = {}
+    specs: Dict[str, Any] = {}
+    if cfg.vision is not None:
+        Pv = cfg.vision.n_patches
+        batch["tokens"] = _sds((B, S - Pv), jnp.int32)
+        batch["vision_embeds"] = _sds((B, Pv, cfg.d_model), jnp.bfloat16)
+        batch["mrope_pos"] = _sds((3, B, S), jnp.int32)
+        specs["tokens"] = P(b_ax, None)
+        specs["vision_embeds"] = P(b_ax, None, None)
+        specs["mrope_pos"] = P(None, b_ax, None)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32)
+        specs["tokens"] = P(b_ax, None)
+    if cfg.encoder is not None:
+        T = cfg.encoder.n_frames
+        batch["frames"] = _sds((B, T, cfg.d_model), jnp.bfloat16)
+        specs["frames"] = P(b_ax, None, None)
+    return batch, specs
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                       ) -> Tuple[Pytree, Pytree]:
+    B = shape.global_batch
+    d = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+    b_ax = "data" if B % d == 0 and B >= d else None
+    batch: Dict[str, Any] = {"tokens": _sds((B, 1), jnp.int32)}
+    specs: Dict[str, Any] = {"tokens": P(b_ax, None)}
+    if cfg.encoder is not None:
+        T = cfg.encoder.n_frames
+        batch["encoder_out"] = _sds((B, T, cfg.d_model), jnp.bfloat16)
+        specs["encoder_out"] = P(b_ax, None, None)
+    return batch, specs
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int) -> Pytree:
+    from repro.models import model as M
+    return jax.eval_shape(
+        lambda: M.init_caches(cfg, batch, max_len, dtype=jnp.bfloat16))
+
+
+def abstract_params(cfg: ModelConfig, n_replicas: int = 0) -> Pytree:
+    from repro.core.averaging import stack_replicas
+    from repro.models import model as M
+
+    def build():
+        p = M.init_params(jax.random.PRNGKey(0), cfg)
+        if n_replicas:
+            p = stack_replicas(p, n_replicas)
+        return p
+    return jax.eval_shape(build)
+
+
+def abstract_opt_state(opt, params_abs: Pytree, stacked: bool) -> Pytree:
+    if stacked:
+        return jax.eval_shape(lambda p: jax.vmap(opt.init)(p), params_abs)
+    return jax.eval_shape(opt.init, params_abs)

@@ -1,0 +1,60 @@
+"""Step-function builders shared by the dry-run, the trainer and the server.
+
+All functions are pure and jit-friendly; the caller supplies shardings at
+jit time (dryrun.py / train.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import averaging as avg
+from repro.models import model as M
+from repro.optim import get_optimizer
+
+Pytree = Any
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        return M.lm_loss(params, batch, cfg)
+    return loss_fn
+
+
+def make_steps(run: RunConfig) -> Dict[str, Callable]:
+    """Returns the three training programs of the paper's system:
+       local_step — Algorithm 1/2 lines 3-4: zero replica-axis collectives
+       sync_step  — parameter averaging + the S_k probe (one all-reduce)
+       full_step  — FULLSGD baseline (gradient all-reduce every step)
+    Each takes/returns replica-stacked (W, opt_state)."""
+    cfg = run.model
+    loss_fn = make_loss_fn(cfg)
+    opt = get_optimizer(run.optimizer, momentum_coef=run.momentum,
+                        weight_decay=run.weight_decay)
+    local = avg.make_local_step(loss_fn, opt)
+    full = avg.make_full_step(loss_fn, opt)
+
+    def sync_step(W, opt_state):
+        return avg.sync_replicas(
+            W, opt_state, sync_momentum=run.averaging.sync_momentum)
+
+    return {"local_step": local, "sync_step": sync_step, "full_step": full,
+            "optimizer": opt, "loss_fn": loss_fn}
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill(params, batch):
+        logits, _ = M.forward(params, batch, cfg)
+        return logits[:, -1, :]
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve(params, batch, caches):
+        logits, caches = M.decode_step(params, batch, caches, cfg)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)
+        return next_tok, caches
+    return serve

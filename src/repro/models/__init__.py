@@ -1,0 +1,4 @@
+from repro.models.model import (  # noqa: F401
+    decode_step, forward, init_caches, init_params, lm_loss, param_count,
+    active_param_count,
+)

@@ -1,0 +1,166 @@
+"""Block composition: attention / mamba / mLSTM / sLSTM mixers + MLP/MoE
+feed-forward sublayers, decoder-only LMs, and enc-dec (whisper) towers."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import xlstm as X
+
+Params = Dict[str, Any]
+
+
+def _has_ffn(cfg: ModelConfig, layer_idx: int) -> bool:
+    kind = cfg.block_kind(layer_idx)
+    if kind in ("mlstm", "slstm"):
+        return False                      # xLSTM blocks are self-contained
+    return cfg.d_ff > 0 or cfg.moe is not None
+
+
+def init_block(key, cfg: ModelConfig, layer_idx: int) -> Params:
+    ks = jax.random.split(key, 4)
+    kind = cfg.block_kind(layer_idx)
+    p: Params = {"norm1": L.init_norm(ks[0], cfg, cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = L.init_attention(ks[1], cfg)
+    elif kind == "mamba":
+        p["mamba"] = M.init_mamba(ks[1], cfg)
+    elif kind == "mlstm":
+        p["mlstm"] = X.init_mlstm(ks[1], cfg)
+    elif kind == "slstm":
+        p["slstm"] = X.init_slstm(ks[1], cfg)
+    else:
+        raise ValueError(kind)
+    if _has_ffn(cfg, layer_idx):
+        p["norm2"] = L.init_norm(ks[2], cfg, cfg.d_model)
+        if cfg.layer_uses_moe(layer_idx):
+            p["moe"] = L.init_moe(ks[3], cfg)
+        else:
+            m = cfg.moe
+            d_ff = (m.d_ff_dense or cfg.d_ff) if (m and layer_idx < m.first_k_dense) \
+                else cfg.d_ff
+            p["mlp"] = L.init_mlp(ks[3], cfg, d_ff=d_ff)
+    return p
+
+
+def init_block_cache(cfg: ModelConfig, layer_idx: int, batch: int,
+                     max_len: int, dtype=jnp.bfloat16) -> Optional[Params]:
+    kind = cfg.block_kind(layer_idx)
+    if kind == "attn":
+        return L.init_kv_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba":
+        return M.init_mamba_state(cfg, batch)
+    if kind == "mlstm":
+        return X.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return X.init_slstm_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def block_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig, layer_idx: int, *,
+                  positions: jnp.ndarray,
+                  cache: Optional[Params] = None,
+                  cache_index: Optional[jnp.ndarray] = None,
+                  cross_kv=None, mrope_pos=None,
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray], Optional[Params]]:
+    kind = cfg.block_kind(layer_idx)
+    h = L.norm_forward(p["norm1"], x, cfg)
+    new_cache = None
+    if kind == "attn":
+        h, new_cache = L.attention_forward(
+            p["attn"], h, cfg, positions=positions, cache=cache,
+            cache_index=cache_index, mrope_pos=mrope_pos)
+    elif kind == "mamba":
+        h, new_cache = M.mamba_forward(p["mamba"], h, cfg, state=cache)
+    elif kind == "mlstm":
+        h, new_cache = X.mlstm_forward(p["mlstm"], h, cfg, state=cache)
+    elif kind == "slstm":
+        h, new_cache = X.slstm_forward(p["slstm"], h, cfg, state=cache)
+    x = x + h * cfg.residual_scale
+    aux: Dict[str, jnp.ndarray] = {}
+    if "norm2" in p:
+        h = L.norm_forward(p["norm2"], x, cfg)
+        if "moe" in p:
+            h, aux = L.moe_forward(p["moe"], h, cfg)
+        else:
+            h = L.mlp_forward(p["mlp"], h, cfg)
+        x = x + h * cfg.residual_scale
+    if cross_kv is not None and "cross" in p:
+        # whisper-style: cross-attention sublayer between self-attn and mlp;
+        # applied after for simplicity of the residual stream (documented).
+        h = L.norm_forward(p["cross_norm"], x, cfg)
+        h, _ = L.attention_forward(p["cross"], h, cfg, positions=positions,
+                                   cross_kv=cross_kv)
+        x = x + h * cfg.residual_scale
+    return x, aux, new_cache
+
+
+def init_cross_attention(key, cfg: ModelConfig, p: Params) -> Params:
+    ks = jax.random.split(key, 2)
+    p["cross"] = L.init_attention(ks[0], cfg)
+    p["cross_norm"] = L.init_norm(ks[1], cfg, cfg.d_model)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Encoder tower (whisper) — bidirectional, sinusoidal positions.
+# ---------------------------------------------------------------------------
+
+
+def init_encoder(key, cfg: ModelConfig) -> Params:
+    e = cfg.encoder
+    ks = jax.random.split(key, e.n_layers + 1)
+    blocks = []
+    import dataclasses
+    ecfg = dataclasses.replace(cfg, n_heads=e.n_heads, n_kv_heads=e.n_heads,
+                               layer_pattern=None, moe=None, d_head=0)
+    for i in range(e.n_layers):
+        blocks.append({
+            "norm1": L.init_norm(ks[i], ecfg, cfg.d_model),
+            "attn": L.init_attention(jax.random.fold_in(ks[i], 1), ecfg),
+            "norm2": L.init_norm(jax.random.fold_in(ks[i], 2), ecfg, cfg.d_model),
+            "mlp": L.init_mlp(jax.random.fold_in(ks[i], 3), ecfg),
+        })
+    return {"blocks": blocks, "final_norm": L.init_norm(ks[-1], ecfg, cfg.d_model)}
+
+
+def encoder_forward(p: Params, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: (B,T,D) post-frontend embeddings (stub)."""
+    import dataclasses
+    e = cfg.encoder
+    ecfg = dataclasses.replace(cfg, n_heads=e.n_heads, n_kv_heads=e.n_heads,
+                               layer_pattern=None, moe=None, d_head=0,
+                               pos_type="none", sliding_window=0)
+    B, T, D = frames.shape
+    x = frames + L.sinusoidal_embedding(T, D).astype(frames.dtype)[None]
+
+    def block(x, blk):
+        h = L.norm_forward(blk["norm1"], x, ecfg)
+        # bidirectional: mask = everything visible
+        q = L.dense(blk["attn"]["wq"], h).reshape(B, T, e.n_heads, D // e.n_heads)
+        k = L.dense(blk["attn"]["wk"], h).reshape(B, T, e.n_heads, D // e.n_heads)
+        v = L.dense(blk["attn"]["wv"], h).reshape(B, T, e.n_heads, D // e.n_heads)
+        mask = jnp.ones((B, T, T), bool)
+        o = L._sdpa(q, k, v, mask)
+        x = x + L.dense(blk["attn"]["wo"], o.reshape(B, T, D))
+        h = L.norm_forward(blk["norm2"], x, ecfg)
+        x = x + L.mlp_forward(blk["mlp"], h, ecfg)
+        return x
+
+    if cfg.scan_layers and len(p["blocks"]) >= 2:
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                         *p["blocks"])
+        body = (lambda x, blk: (block(x, blk), None))
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, stacked)
+    else:
+        for blk in p["blocks"]:
+            x = block(x, blk)
+    return L.norm_forward(p["final_norm"], x, ecfg)

@@ -1,0 +1,286 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix-memory, parallelizable)
+and sLSTM (scalar-memory, strictly recurrent).
+
+The mLSTM is implemented in *chunkwise-parallel* form: the sequence is cut
+into chunks; a sequential `lax.scan` carries the stabilized matrix state
+across chunks while each chunk computes its quadratic part locally.  This is
+the TPU-native formulation (MXU-friendly intra-chunk matmuls, O(S·L) memory
+instead of O(S²)) and is what makes the 500k-token decode shape feasible.
+
+Stabilization follows the paper: with a_t = Σ_{r≤t} log f_r and
+b_s = log i_s − a_s, the output weights are exp(b_s − μ_t) with
+μ_t = max(m_state, cummax_{s≤t} b_s); the carried state is C·e^{−m}.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+CHUNK = 256
+CONV_K = 4
+
+
+def _heads(cfg: ModelConfig) -> Tuple[int, int]:
+    H = cfg.n_heads
+    return H, cfg.d_model // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (pre-up-projection, factor 2)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    D = cfg.d_model
+    Di = 2 * D
+    H, dh = cfg.n_heads, (2 * D) // cfg.n_heads
+    ks = jax.random.split(key, 8)
+    s = 1.0 / math.sqrt(D)
+    si = 1.0 / math.sqrt(Di)
+    return {
+        "up": (jax.random.normal(ks[0], (D, 2 * Di)) * s).astype(dt),
+        "conv_w": (jax.random.normal(ks[1], (CONV_K, Di)) / math.sqrt(CONV_K)).astype(dt),
+        "conv_b": jnp.zeros((Di,), dt),
+        "wq": (jax.random.normal(ks[2], (Di, Di)) * si).astype(dt),
+        "wk": (jax.random.normal(ks[3], (Di, Di)) * si).astype(dt),
+        "wv": (jax.random.normal(ks[4], (Di, Di)) * si).astype(dt),
+        "w_if": (jax.random.normal(ks[5], (Di, 2 * H)) * si).astype(dt),
+        "b_i": jnp.zeros((H,), dt),
+        "b_f": jnp.full((H,), 3.0, dt),      # forget gate bias -> remember
+        "ogate_norm": jnp.ones((Di,), dt),   # per-head groupnorm scale
+        "down": (jax.random.normal(ks[6], (Di, D)) * si).astype(dt),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    H = cfg.n_heads
+    dh = (2 * cfg.d_model) // H
+    Di = 2 * cfg.d_model
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), dtype),
+        "n": jnp.zeros((batch, H, dh), dtype),
+        "m": jnp.full((batch, H), -1e30, dtype),
+        "conv": jnp.zeros((batch, CONV_K - 1, Di), dtype),
+    }
+
+
+def _headify(x, H):
+    B, S, Di = x.shape
+    return x.reshape(B, S, H, Di // H)
+
+
+def _group_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5):
+    """Per-head normalization of (B,S,H,dh)."""
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    B, S, H, dh = x.shape
+    return (y.reshape(B, S, H * dh) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlstm_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                  state: Optional[Params] = None,
+                  ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    B, S, D = x.shape
+    H = cfg.n_heads
+    Di = 2 * D
+    dh = Di // H
+    up = x @ p["up"].astype(x.dtype)
+    xi, z = jnp.split(up, 2, axis=-1)                        # (B,S,Di) each
+
+    # causal depthwise conv on the qk path
+    if state is None:
+        pad = jnp.zeros((B, CONV_K - 1, Di), xi.dtype)
+        xp = jnp.concatenate([pad, xi], axis=1)
+        new_conv = None
+    else:
+        xp = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)
+        new_conv = xp[:, 1:, :]
+    conv = sum(xp[:, i:i + S, :] * p["conv_w"][i].astype(xi.dtype)
+               for i in range(CONV_K)) + p["conv_b"].astype(xi.dtype)
+    cx = jax.nn.silu(conv)
+
+    q = _headify(cx @ p["wq"].astype(x.dtype), H) / math.sqrt(dh)
+    k = _headify(cx @ p["wk"].astype(x.dtype), H)
+    v = _headify(xi @ p["wv"].astype(x.dtype), H)
+    gates = (cx @ p["w_if"].astype(x.dtype)).astype(jnp.float32)
+    log_i = gates[..., :H] + p["b_i"].astype(jnp.float32)     # (B,S,H) exp input gate
+    log_f = jax.nn.log_sigmoid(gates[..., H:] + p["b_f"].astype(jnp.float32))
+
+    if state is not None:
+        h, new_state = _mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                   log_i[:, 0], log_f[:, 0], state)
+        h = h[:, None]                                        # (B,1,H,dh)
+        new_state = {**new_state, "conv": new_conv.astype(state["conv"].dtype)}
+    else:
+        h = _mlstm_chunkwise(q, k, v, log_i, log_f)
+        new_state = None
+
+    h = _group_norm(h, p["ogate_norm"]) * jax.nn.silu(z)
+    out = h @ p["down"].astype(x.dtype)
+    return out, new_state
+
+
+def _mlstm_step(q, k, v, log_i, log_f, state):
+    """Single decode step.  q,k,v: (B,H,dh); log_i/f: (B,H)."""
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(log_f + m, log_i)
+    fs = jnp.exp(log_f + m - m_new)[..., None]
+    is_ = jnp.exp(log_i - m_new)[..., None]
+    C_new = fs[..., None] * C + is_[..., None] * (k[..., :, None] * v[..., None, :])
+    n_new = fs * n + is_ * k
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C_new)
+    den = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n_new)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h.astype(q.dtype), {"C": C_new, "n": n_new, "m": m_new}
+
+
+def _mlstm_chunkwise(q, k, v, log_i, log_f):
+    """q,k,v: (B,S,H,dh) ; log_i, log_f: (B,S,H).  Returns h (B,S,H,dh)."""
+    B, S, H, dh = q.shape
+    L = min(CHUNK, S)
+    while S % L:
+        L //= 2
+    NC = S // L
+
+    def rs(x):  # (B,S,...) -> (NC,B,L,...)
+        return x.reshape(B, NC, L, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = rs(q.astype(jnp.float32)), rs(k.astype(jnp.float32)), rs(v.astype(jnp.float32))
+    lic, lfc = rs(log_i), rs(log_f)
+
+    def chunk(carry, xs):
+        C, n, m = carry                                     # (B,H,dh,dh),(B,H,dh),(B,H)
+        qj, kj, vj, li, lf = xs                             # (B,L,...)
+        a = jnp.cumsum(lf, axis=1)                          # (B,L,H) local cumsum log f
+        b = li - a                                          # (B,L,H)
+        bmax = jax.lax.cummax(b, axis=1)
+        mu = jnp.maximum(m[:, None], bmax)                  # (B,L,H)
+        # intra-chunk quadratic part
+        wloc = jnp.exp(b[:, None, :, :] - mu[:, :, None, :])      # (B,Lq,Ls,H)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        wloc = jnp.where(causal[None, :, :, None], wloc, 0.0)
+        scores = jnp.einsum("bqhd,bshd->bqsh", qj, kj) * wloc
+        num = jnp.einsum("bqsh,bshd->bqhd", scores, vj)
+        den = scores.sum(axis=2)                                   # (B,L,H)
+        # inter-chunk contribution from carried state
+        wstate = jnp.exp(m[:, None] - mu)                          # (B,L,H)
+        num = num + wstate[..., None] * jnp.einsum("blhd,bhde->blhe", qj, C)
+        den = den + wstate * jnp.einsum("blhd,bhd->blh", qj, n)
+        # true max exponent at step l is ā_l + mu_l (ā cancels in the
+        # weights but NOT in the |den| >= exp(-m) stabilizer clamp)
+        hj = num / jnp.maximum(jnp.abs(den), jnp.exp(-(a + mu)))[..., None]
+        # advance state to end of chunk
+        A = a[:, -1]                                               # (B,H)
+        m_end = jnp.maximum(m + A, A + bmax[:, -1])
+        w_in = jnp.exp(A[:, None] + b - m_end[:, None])            # (B,L,H)
+        C_new = jnp.exp(m + A - m_end)[..., None, None] * C + \
+            jnp.einsum("blh,blhd,blhe->bhde", w_in, kj, vj)
+        n_new = jnp.exp(m + A - m_end)[..., None] * n + \
+            jnp.einsum("blh,blhd->bhd", w_in, kj)
+        return (C_new, n_new, m_end), hj
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(chunk, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    h = hs.swapaxes(0, 1).reshape(B, S, H, dh)
+    return h.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (post-up-projection) — strictly recurrent
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(D)
+    ff = max(1, int(D * 4 / 3 / 64) * 64) if cfg.d_ff == 0 else cfg.d_ff
+    return {
+        "wx": (jax.random.normal(ks[0], (D, 4 * D)) * s).astype(dt),     # i,f,z,o
+        "r": (jax.random.normal(ks[1], (H, dh, 4 * dh)) / math.sqrt(dh)).astype(dt),
+        "b": jnp.concatenate([jnp.zeros((D,)), jnp.full((D,), 3.0),
+                              jnp.zeros((2 * D,))]).astype(dt),
+        "gn": jnp.ones((D,), dt),
+        "ff_gate": (jax.random.normal(ks[2], (D, ff)) * s).astype(dt),
+        "ff_up": (jax.random.normal(ks[3], (D, ff)) * s).astype(dt),
+        "ff_down": (jax.random.normal(ks[4], (ff, D)) / math.sqrt(ff)).astype(dt),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    D = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, D), dtype),
+        "n": jnp.zeros((batch, D), dtype),
+        "h": jnp.zeros((batch, D), dtype),
+        "m": jnp.full((batch, D), -1e30, dtype),
+    }
+
+
+def _slstm_cell(p, xt, st, cfg: ModelConfig):
+    """xt: (B,4D) pre-computed input contribution; st: state dict."""
+    H = cfg.n_heads
+    D = cfg.d_model
+    dh = D // H
+    B = xt.shape[0]
+    hprev = st["h"].reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hprev.astype(jnp.float32),
+                     p["r"].astype(jnp.float32)).reshape(B, 4 * D)
+    pre = xt.astype(jnp.float32) + rec + p["b"].astype(jnp.float32)
+    li_, lf_, z_, o_ = jnp.split(pre, 4, axis=-1)
+    log_i = li_                                    # exponential input gate
+    log_f = jax.nn.log_sigmoid(lf_)
+    z = jnp.tanh(z_)
+    o = jax.nn.sigmoid(o_)
+    m_new = jnp.maximum(log_f + st["m"], log_i)
+    fs = jnp.exp(log_f + st["m"] - m_new)
+    is_ = jnp.exp(log_i - m_new)
+    c_new = fs * st["c"] + is_ * z
+    n_new = fs * st["n"] + is_
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                  state: Optional[Params] = None,
+                  ) -> Tuple[jnp.ndarray, Optional[Params]]:
+    B, S, D = x.shape
+    xg = x @ p["wx"].astype(x.dtype)                          # (B,S,4D)
+
+    if state is not None:
+        st = {k: v.astype(jnp.float32) for k, v in state.items()}
+        st = _slstm_cell(p, xg[:, 0], st, cfg)
+        h = st["h"][:, None]
+        new_state = {k: v.astype(state[k].dtype) for k, v in st.items()}
+    else:
+        st0 = {k: v.astype(jnp.float32)
+               for k, v in init_slstm_state(cfg, B).items()}
+
+        def step(st, xt):
+            st = _slstm_cell(p, xt, st, cfg)
+            return st, st["h"]
+
+        _, hs = jax.lax.scan(step, st0, xg.swapaxes(0, 1))
+        h = hs.swapaxes(0, 1)                                 # (B,S,D)
+        new_state = None
+
+    h = _group_norm(h.reshape(B, -1, cfg.n_heads, D // cfg.n_heads),
+                    p["gn"]).astype(x.dtype)
+    # gated feed-forward (post-up-projection block)
+    y = (jax.nn.silu(h @ p["ff_gate"].astype(x.dtype)) *
+         (h @ p["ff_up"].astype(x.dtype))) @ p["ff_down"].astype(x.dtype)
+    return y, new_state

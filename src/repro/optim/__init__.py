@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    get_optimizer, sgd, momentum, adamw, Optimizer,
+)
+from repro.optim.schedules import make_lr_schedule  # noqa: F401

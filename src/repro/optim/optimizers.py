@@ -1,0 +1,99 @@
+"""Optimizers as pure functions (no optax on this container — built in JAX).
+
+An ``Optimizer`` is a pair of pure functions so it vmaps cleanly over the
+replica axis used by the periodic-averaging algorithms:
+
+    state               = opt.init(params)
+    params, state       = opt.update(grads, state, params, lr)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+
+
+def sgd(weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params, lr):
+        def upd(p, g):
+            g = g + weight_decay * p if weight_decay else g
+            return p - lr * g.astype(p.dtype)
+        return jax.tree_util.tree_map(upd, params, grads), state
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(beta: float = 0.9, weight_decay: float = 0.0,
+             nesterov: bool = False) -> Optimizer:
+    """Heavy-ball momentum — the paper's optimizer (coef 0.9, §IV-A)."""
+
+    def init(params):
+        return {"m": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        def upd_m(m, g, p):
+            g = g + weight_decay * p if weight_decay else g
+            return beta * m + g
+        m = jax.tree_util.tree_map(upd_m, state["m"], grads, params)
+        if nesterov:
+            def upd_p(p, m_, g):
+                return p - lr * (beta * m_ + g).astype(p.dtype)
+            new_params = jax.tree_util.tree_map(upd_p, params, m, grads)
+        else:
+            new_params = jax.tree_util.tree_map(
+                lambda p, m_: p - lr * m_.astype(p.dtype), params, m)
+        return new_params, {"m": m}
+
+    return Optimizer("momentum", init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, z),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return (p - lr * (step + weight_decay * p.astype(jnp.float32))
+                    .astype(p.dtype))
+        return (jax.tree_util.tree_map(upd, params, m, v),
+                {"m": m, "v": v, "t": t})
+
+    return Optimizer("adamw", init, update)
+
+
+def get_optimizer(name: str, *, momentum_coef: float = 0.9,
+                  weight_decay: float = 0.0) -> Optimizer:
+    if name == "sgd":
+        return sgd(weight_decay)
+    if name == "momentum":
+        return momentum(momentum_coef, weight_decay)
+    if name == "adamw":
+        return adamw(weight_decay=weight_decay or 0.1)
+    raise ValueError(name)

@@ -1,0 +1,9 @@
+import os
+
+# Tests must see exactly 1 device (the dry-run, and only the dry-run, forces
+# 512 placeholder devices via its own XLA_FLAGS before jax init).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

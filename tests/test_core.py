@@ -1,0 +1,219 @@
+"""Unit tests for the paper's core: averaging math, Algorithm 2 controller,
+QSGD, comm model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import AveragingConfig
+from repro.core import averaging as avg
+from repro.core import qsgd
+from repro.core.comm_model import (method_comm, ring_allreduce_bytes,
+                                   roofline_terms, speedup_vs_fullsgd)
+from repro.core.controller import (ADPSGDController, ConstantPeriodController,
+                                   DecreasingPeriodController,
+                                   FullSyncController, make_controller)
+from repro.optim import get_optimizer
+
+KEY = jax.random.PRNGKey(0)
+
+
+def quad_loss(params, batch):
+    """Simple quadratic: ||w - target||^2 with per-sample noise."""
+    d = params["w"] - batch["target"].mean(0)
+    loss = jnp.sum(d * d)
+    return loss, {"ce_loss": loss}
+
+
+def make_quad(R=4, dim=8):
+    params = {"w": jnp.zeros((dim,))}
+    W = avg.stack_replicas(params, R)
+    return params, W
+
+
+class TestAveraging:
+    def test_stack_and_mean_roundtrip(self):
+        params, W = make_quad()
+        leaves = jax.tree_util.tree_leaves(W)
+        assert all(x.shape[0] == 4 for x in leaves)
+        back = avg.replica_mean(W)
+        np.testing.assert_allclose(back["w"], params["w"])
+
+    def test_variance_zero_when_identical(self):
+        _, W = make_quad()
+        assert float(avg.parameter_variance(W)) == 0.0
+
+    def test_variance_formula(self):
+        W = {"w": jnp.array([[1.0, 0.0], [3.0, 0.0]])}
+        # mean = 2; dev = 1 each; Var = (1 + 1)/2 = 1
+        assert float(avg.parameter_variance(W)) == pytest.approx(1.0)
+
+    def test_sync_produces_mean_and_sk(self):
+        W = {"w": jnp.array([[1.0, 2.0], [3.0, 4.0]])}
+        Ws, _, sk = avg.sync_replicas(W)
+        np.testing.assert_allclose(Ws["w"], [[2.0, 3.0], [2.0, 3.0]])
+        assert float(sk) == pytest.approx(2.0)  # (1+1+1+1)/2
+
+    def test_sync_kernel_path_matches(self):
+        W = {"a": jax.random.normal(KEY, (4, 33)),
+             "b": jax.random.normal(jax.random.fold_in(KEY, 1), (4, 5, 7))}
+        W1, _, sk1 = avg.sync_replicas(W)
+        W2, _, sk2 = avg.sync_replicas(W, use_kernel=True)
+        for k in W:
+            np.testing.assert_allclose(W1[k], W2[k], atol=1e-6)
+        np.testing.assert_allclose(sk1, sk2, rtol=1e-5)
+
+    def test_local_step_keeps_replicas_independent(self):
+        opt = get_optimizer("sgd")
+        step = avg.make_local_step(quad_loss, opt)
+        _, W = make_quad(R=2, dim=2)
+        opt_state = jax.vmap(opt.init)(W)
+        batch = {"target": jnp.stack([jnp.ones((4, 2)), -jnp.ones((4, 2))])}
+        W2, _, m = step(W, opt_state, batch, jnp.float32(0.1))
+        # replica 0 moves toward +1, replica 1 toward -1
+        assert float(W2["w"][0, 0]) > 0 > float(W2["w"][1, 0])
+        assert float(avg.parameter_variance(W2)) > 0
+
+    def test_full_step_keeps_replicas_identical(self):
+        opt = get_optimizer("momentum")
+        step = avg.make_full_step(quad_loss, opt)
+        _, W = make_quad(R=2, dim=2)
+        opt_state = jax.vmap(opt.init)(W)
+        batch = {"target": jnp.stack([jnp.ones((4, 2)), -jnp.ones((4, 2))])}
+        W2, opt2, _ = step(W, opt_state, batch, jnp.float32(0.1))
+        assert float(avg.parameter_variance(W2)) < 1e-12
+
+    def test_local_step_n1_equals_full_step(self):
+        opt = get_optimizer("momentum")
+        local = avg.make_local_step(quad_loss, opt)
+        full = avg.make_full_step(quad_loss, opt)
+        params = {"w": jax.random.normal(KEY, (3,))}
+        W = avg.stack_replicas(params, 1)
+        st = jax.vmap(opt.init)(W)
+        batch = {"target": jax.random.normal(KEY, (1, 4, 3))}
+        W1, _, _ = local(W, st, batch, jnp.float32(0.05))
+        W2, _, _ = full(W, st, batch, jnp.float32(0.05))
+        np.testing.assert_allclose(W1["w"], W2["w"], atol=1e-7)
+
+    def test_group_sync(self):
+        W = {"w": jnp.arange(8.0).reshape(4, 2)}
+        Wg = avg.group_sync(W, 2)
+        np.testing.assert_allclose(
+            Wg["w"], [[1.0, 2.0], [1.0, 2.0], [5.0, 6.0], [5.0, 6.0]])
+
+
+class TestControllers:
+    def cfg(self, **kw):
+        base = dict(method="adpsgd", p_init=4, p_const=8,
+                    k_sample_frac=0.1, warmup_full_sync_steps=0)
+        base.update(kw)
+        return AveragingConfig(**base)
+
+    def test_full_sync_every_step(self):
+        c = FullSyncController(self.cfg(method="fullsgd"), 100)
+        assert all(c.sync_now(k) for k in range(10))
+
+    def test_constant_period(self):
+        c = ConstantPeriodController(self.cfg(method="cpsgd"), 100)
+        syncs = [k for k in range(32) if c.sync_now(k)]
+        assert syncs == [7, 15, 23, 31]
+
+    def test_warmup_syncs_every_step(self):
+        c = ADPSGDController(self.cfg(warmup_full_sync_steps=5), 100)
+        assert all(c.sync_now(k) for k in range(5))
+
+    def test_adpsgd_samples_c2_then_adapts_up(self):
+        # constant S_k/lr during sampling -> C2 = that ratio; then feed
+        # small S_k -> period must increase (Algorithm 2 line 16-17)
+        c = ADPSGDController(self.cfg(k_sample_frac=0.2), total_steps=100)
+        k = 0
+        while k < 20:                      # sampling window (K_s = 20)
+            if c.sync_now(k):
+                c.observe(k, 0.1, 0.05)    # S_k/lr = 0.5
+            k += 1
+        assert c.c2 == pytest.approx(0.5)
+        p0 = c.period
+        while k < 60:
+            if c.sync_now(k):
+                c.observe(k, 0.1, 0.01)    # S_k << 0.7 * lr * C2
+            k += 1
+        assert c.period > p0
+
+    def test_adpsgd_adapts_down_and_respects_pmin(self):
+        c = ADPSGDController(self.cfg(k_sample_frac=0.1, p_init=3), 100)
+        for k in range(10):
+            if c.sync_now(k):
+                c.observe(k, 0.1, 0.05)
+        for k in range(10, 100):
+            if c.sync_now(k):
+                c.observe(k, 0.1, 10.0)    # S_k >> 1.3 * lr * C2
+        assert c.period == 1               # clamped at p_min
+
+    def test_adpsgd_dead_band_keeps_period(self):
+        c = ADPSGDController(self.cfg(k_sample_frac=0.1), 100)
+        for k in range(10):
+            if c.sync_now(k):
+                c.observe(k, 0.1, 0.05)
+        p0 = c.period
+        for k in range(10, 50):
+            if c.sync_now(k):
+                c.observe(k, 0.1, 0.05)    # S_k == lr*C2: inside dead band
+        assert c.period == p0
+
+    def test_decreasing_controller(self):
+        cfg = self.cfg(method="decreasing", decreasing_p0=10, decreasing_p1=2)
+        c = DecreasingPeriodController(cfg, 100)
+        early = [k for k in range(50) if c.sync_now(k)]
+        late = [k for k in range(50, 100) if c.sync_now(k)]
+        assert len(late) > len(early)
+
+    def test_make_controller_dispatch(self):
+        for m in ["adpsgd", "cpsgd", "fullsgd", "qsgd", "decreasing"]:
+            assert make_controller(self.cfg(method=m), 10) is not None
+
+
+class TestQSGD:
+    def test_quantize_unbiased(self):
+        x = jnp.array([0.3, -0.7, 1.1, 0.0])
+        keys = jax.random.split(KEY, 2000)
+        dq = jax.vmap(lambda k: qsgd.dequantize(
+            *qsgd.quantize(x, k, 8), 8))(keys)
+        np.testing.assert_allclose(dq.mean(0), x, atol=5e-3)
+
+    def test_qsgd_step_keeps_replicas_identical(self):
+        opt = get_optimizer("momentum")
+        step = qsgd.make_qsgd_step(quad_loss, opt, bits=8)
+        params = {"w": jax.random.normal(KEY, (5,))}
+        W = avg.stack_replicas(params, 4)
+        st = jax.vmap(opt.init)(W)
+        batch = {"target": jax.random.normal(KEY, (4, 8, 5))}
+        W2, _, _ = step(W, st, batch, jnp.float32(0.1), KEY)
+        assert float(avg.parameter_variance(W2)) < 1e-12
+
+
+class TestCommModel:
+    def test_ring_allreduce_bytes(self):
+        assert ring_allreduce_bytes(100, 2) == pytest.approx(400.0)
+
+    def test_periodic_beats_full(self):
+        full = method_comm("fullsgd", int(1e7), 16, 1000, 1000, 1e9)
+        adp = method_comm("adpsgd", int(1e7), 16, 1000, 125, 1e9)
+        assert adp.time_s < full.time_s / 7
+
+    def test_qsgd_quarter_bytes(self):
+        full = method_comm("fullsgd", int(1e6), 16, 10, 10, 1e9)
+        q = method_comm("qsgd", int(1e6), 16, 10, 10, 1e9)
+        assert q.bytes_per_node == pytest.approx(full.bytes_per_node / 4)
+
+    def test_speedup_increases_when_bandwidth_drops(self):
+        s100 = speedup_vs_fullsgd("adpsgd", int(25e6), 16, 4000, 498,
+                                  0.1, 100e9 / 8)
+        s10 = speedup_vs_fullsgd("adpsgd", int(25e6), 16, 4000, 498,
+                                 0.1, 10e9 / 8)
+        assert s10 > s100 > 1.0
+
+    def test_roofline_dominant(self):
+        r = roofline_terms(1e15, 1e12, 1e14, 256)
+        assert r["dominant"] == "collective"
+        r = roofline_terms(1e18, 1e12, 1e10, 256)
+        assert r["dominant"] == "compute"

@@ -1,0 +1,71 @@
+"""Unit tests for the dry-run analysis pipeline's pure math: HLO collective
+parsing and the scan-cost affine extrapolation (no devices needed)."""
+import importlib
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def dryrun():
+    # importing repro.launch.dryrun sets XLA_FLAGS, but jax is already
+    # initialized by conftest with 1 device — the env write is inert here.
+    return importlib.import_module("repro.launch.dryrun")
+
+
+HLO = """
+  %ar = f32[16,1024]{1,0} all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[4096,128]{1,0} all-gather(%y), replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %rs = f32[64]{0} reduce-scatter(%z), replica_groups=[64,4]<=[256], dimensions={0}
+  %a2a = f32[8,8]{1,0} all-to-all(%w), replica_groups=[32,8]<=[256]
+  %cp = f32[100]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %solo = f32[9]{0} all-reduce(%q), replica_groups=[256,1]<=[256], to_apply=%add
+"""
+
+
+def test_parse_collectives_factors(dryrun):
+    out = dryrun.parse_collectives(HLO)
+    by = out["bytes_by_type"]
+    # all-reduce: 16*1024*4 bytes * 2*(15/16)
+    assert by["all-reduce"] == pytest.approx(16 * 1024 * 4 * 2 * 15 / 16)
+    # all-gather: bf16, (n-1)/n
+    assert by["all-gather"] == pytest.approx(4096 * 128 * 2 * 15 / 16)
+    # reduce-scatter: result bytes * (n-1)
+    assert by["reduce-scatter"] == pytest.approx(64 * 4 * 3)
+    # all-to-all over 8 participants
+    assert by["all-to-all"] == pytest.approx(8 * 8 * 4 * 7 / 8)
+    assert by["collective-permute"] == pytest.approx(400)
+    # single-participant groups contribute nothing
+    assert out["count_by_type"]["all-reduce"] == 1
+    assert out["total_bytes"] == pytest.approx(sum(by.values()))
+
+
+def test_affine_extrapolation(dryrun):
+    a1 = {"flops_per_chip": 10.0, "hbm_bytes_per_chip": 100.0,
+          "collective_bytes_per_chip": 5.0,
+          "collectives": {"bytes_by_type": {"all-reduce": 5.0},
+                          "count_by_type": {"all-reduce": 1}}}
+    a2 = {"flops_per_chip": 16.0, "hbm_bytes_per_chip": 140.0,
+          "collective_bytes_per_chip": 7.0,
+          "collectives": {"bytes_by_type": {"all-reduce": 6.0,
+                                            "all-gather": 1.0},
+                          "count_by_type": {"all-reduce": 2}}}
+    # anchors L=1,2 -> per-layer deltas 6/40/2; target L=12
+    out = dryrun._affine_extrapolate(a1, a2, 1, 2, 12)
+    assert out["flops_per_chip"] == pytest.approx(10 + 6 * 11)
+    assert out["hbm_bytes_per_chip"] == pytest.approx(100 + 40 * 11)
+    assert out["collective_bytes_per_chip"] == pytest.approx(5 + 2 * 11)
+    by = out["collectives"]["bytes_by_type"]
+    assert by["all-reduce"] == pytest.approx(5 + 1 * 11)
+    assert by["all-gather"] == pytest.approx(0 + 1 * 11)
+
+
+def test_pair_runnability_rules(dryrun):
+    assert dryrun.pair_is_runnable("xlstm-350m", "long_500k")
+    assert dryrun.pair_is_runnable("mixtral-8x22b", "long_500k")
+    assert not dryrun.pair_is_runnable("olmo-1b", "long_500k")
+    assert dryrun.pair_is_runnable("whisper-medium", "decode_32k")
+    # 40 pairs = 33 runnable + 7 documented skips
+    runnable = sum(dryrun.pair_is_runnable(a, s) for a in dryrun.ARCHS
+                   for s in ("train_4k", "prefill_32k", "decode_32k",
+                             "long_500k"))
+    assert runnable == 33

@@ -1,0 +1,183 @@
+"""Per-architecture smoke tests (reduced configs, deliverable (f)) + decode
+parity for every state kind."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import averaging as avg
+from repro.launch.steps import make_loss_fn
+from repro.models import model as M
+from repro.optim import get_optimizer
+
+ARCHS = ["qwen2-vl-2b", "xlstm-350m", "whisper-medium", "qwen2.5-14b",
+         "olmo-1b", "glm4-9b", "mixtral-8x22b", "jamba-1.5-large-398b",
+         "deepseek-v2-lite-16b", "minicpm-2b"]
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B, S, key=KEY):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.vision is not None:
+        Pv = cfg.vision.n_patches
+        batch["vision_embeds"] = 0.02 * jax.random.normal(
+            key, (B, Pv, cfg.d_model))
+        batch["mrope_pos"] = jnp.broadcast_to(
+            jnp.arange(S + Pv, dtype=jnp.int32), (3, B, S + Pv))
+    if cfg.encoder is not None:
+        batch["frames"] = 0.1 * jax.random.normal(
+            key, (B, cfg.encoder.n_frames, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = reduced(get_config(arch).model)
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    params = M.init_params(KEY, cfg)
+    B, S = 2, 64
+    batch = make_batch(cfg, B, S)
+    logits, aux = M.forward(params, batch, cfg)
+    S_total = S + (cfg.vision.n_patches if cfg.vision else 0)
+    assert logits.shape == (B, S_total, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_one_train_step(arch):
+    run = get_config(arch)
+    cfg = reduced(run.model)
+    params = M.init_params(KEY, cfg)
+    loss_fn = make_loss_fn(cfg)
+    opt = get_optimizer(run.optimizer, momentum_coef=run.momentum)
+    R = 2
+    W = avg.stack_replicas(params, R)
+    opt_state = jax.vmap(opt.init)(W)
+    step = jax.jit(avg.make_local_step(loss_fn, opt))
+    b1 = make_batch(cfg, 2, 32, key=jax.random.fold_in(KEY, 1))
+    b2 = make_batch(cfg, 2, 32, key=jax.random.fold_in(KEY, 2))
+    batch = jax.tree_util.tree_map(lambda a, b: jnp.stack([a, b]), b1, b2)
+    W2, opt2, metrics = step(W, opt_state, batch, jnp.float32(1e-2))
+    assert np.isfinite(float(metrics["loss"]))
+    for x in jax.tree_util.tree_leaves(W2):
+        assert bool(jnp.all(jnp.isfinite(x))), arch
+    # params actually moved, and replicas diverged (different batches)
+    assert float(avg.parameter_variance(W2)) > 0
+
+    W3, _, sk = avg.sync_replicas(W2, opt2)
+    assert float(avg.parameter_variance(W3)) < 1e-9
+    assert float(sk) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Incremental cached decode == full parallel forward, for every state
+    kind (KV / ring-buffer / MLA latent / mamba / mLSTM / sLSTM)."""
+    cfg = reduced(get_config(arch).model)
+    if cfg.moe is not None:  # avoid capacity drops (inherent train/serve gap)
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe, capacity_factor=8.0))
+    # vlm: text-only continuation (no vision_embeds fed to either path;
+    # M-RoPE falls back to t=h=w = position, identical in both paths)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 24
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    extra = {}
+    if cfg.encoder is not None:
+        frames = 0.1 * jax.random.normal(KEY, (B, cfg.encoder.n_frames,
+                                               cfg.d_model))
+        batch["frames"] = frames
+        from repro.models import transformer as T
+        extra["encoder_out"] = T.encoder_forward(params["encoder"], frames, cfg)
+    full_logits, _ = M.forward(params, batch, cfg)
+    caches = M.init_caches(cfg, B, S, dtype=jnp.float32)
+    step = jax.jit(lambda p, b, c: M.decode_step(p, b, c, cfg))
+    for t in range(S):
+        lg, caches = step(params, {"tokens": toks[:, t:t + 1], **extra}, caches)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]), np.asarray(full_logits[:, t]),
+            atol=5e-4, rtol=1e-3)
+
+
+def test_sliding_window_ring_buffer():
+    """SWA decode with a buffer smaller than the sequence stays exact."""
+    cfg = reduced(get_config("mixtral-8x22b").model, sliding_window=8,
+                  layer_pattern=None, moe=None, d_ff=128)
+    params = M.init_params(KEY, cfg)
+    B, S = 1, 32
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    full_logits, _ = M.forward(params, {"tokens": toks}, cfg)
+    caches = M.init_caches(cfg, B, S, dtype=jnp.float32)
+    # ring buffer is only `window` wide
+    assert caches["layers"][0]["k"].shape[1] == 8
+    step = jax.jit(lambda p, b, c: M.decode_step(p, b, c, cfg))
+    for t in range(S):
+        lg, caches = step(params, {"tokens": toks[:, t:t + 1]}, caches)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full_logits[:, t]),
+                                   atol=5e-4, rtol=1e-3)
+
+
+def test_mla_cache_is_latent_sized():
+    cfg = reduced(get_config("deepseek-v2-lite-16b").model)
+    caches = M.init_caches(cfg, 2, 64, dtype=jnp.bfloat16)
+    layer = caches["layers"][0]
+    assert set(layer) == {"ckv", "kpe", "pos"}
+    assert layer["ckv"].shape == (2, 64, cfg.mla.kv_lora_rank)
+    # latent cache is much smaller than full GQA KV would be
+    full_kv = 2 * 64 * cfg.n_heads * (cfg.mla.qk_nope_head_dim
+                                      + cfg.mla.qk_rope_head_dim) * 2
+    latent = layer["ckv"].size + layer["kpe"].size
+    assert latent * 3 < full_kv
+
+
+def test_moe_aux_losses_present_and_finite():
+    cfg = reduced(get_config("mixtral-8x22b").model)
+    params = M.init_params(KEY, cfg)
+    loss, aux = M.lm_loss(params, make_batch(cfg, 2, 64), cfg)
+    assert "moe_load_balance" in aux and "moe_z_loss" in aux
+    assert float(aux["moe_load_balance"]) > 0
+    assert np.isfinite(float(loss))
+
+
+def test_minicpm_scalings_applied():
+    cfg = reduced(get_config("minicpm-2b").model)
+    assert cfg.emb_scale == 12.0
+    assert 0 < cfg.residual_scale < 1
+    assert cfg.logit_scale == pytest.approx(256.0 / 2304)
+
+
+def test_full_configs_match_assignment():
+    spec = {
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+        "qwen2.5-14b": (48, 5120, 40, 8, 13824, 152064),
+        "olmo-1b": (16, 2048, 16, 16, 8192, 50304),
+        "glm4-9b": (40, 4096, 32, 2, 13696, 151552),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+    }
+    for arch, (L, D, H, KV, F, V) in spec.items():
+        m = get_config(arch).model
+        ff = m.moe.d_ff_expert if arch == "deepseek-v2-lite-16b" else m.d_ff
+        assert (m.n_layers, m.d_model, m.n_heads, m.n_kv_heads, ff,
+                m.vocab_size) == (L, D, H, KV, F, V), arch
+    # MoE extras
+    mx = get_config("mixtral-8x22b").model.moe
+    assert (mx.n_experts, mx.top_k) == (8, 2)
+    ja = get_config("jamba-1.5-large-398b").model
+    assert (ja.moe.n_experts, ja.moe.top_k) == (16, 2)
+    assert ja.layer_pattern.count("attn") == 1 and len(ja.layer_pattern) == 8
+    ds = get_config("deepseek-v2-lite-16b").model
+    assert (ds.moe.n_experts, ds.moe.top_k, ds.moe.n_shared_experts) == (64, 6, 2)
+    assert ds.mla.kv_lora_rank == 512

@@ -1,0 +1,58 @@
+"""Layer-scan (compile-time optimization) must be numerically identical to
+the python-loop path for every block family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import model as M
+
+CASES = {
+    "qwen2.5-14b": dict(n_layers=4),
+    "mixtral-8x22b": dict(n_layers=4),
+    "deepseek-v2-lite-16b": dict(n_layers=5),
+    "xlstm-350m": dict(n_layers=4, layer_pattern=("mlstm", "slstm")),
+    "jamba-1.5-large-398b": dict(n_layers=4, layer_pattern=("mamba", "attn")),
+    "whisper-medium": dict(n_layers=4),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(CASES))
+def test_scan_equals_loop(arch):
+    cfg_loop = reduced(get_config(arch).model, **CASES[arch])
+    cfg_scan = dataclasses.replace(cfg_loop, scan_layers=True)
+    assert cfg_scan.scan_grouping() is not None
+    params = M.init_params(jax.random.PRNGKey(0), cfg_loop)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg_loop.vocab_size)}
+    if cfg_loop.encoder is not None:
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (2, cfg_loop.encoder.n_frames,
+                                    cfg_loop.d_model))
+    l1, a1 = M.forward(params, batch, cfg_loop)
+    l2, a2 = M.forward(params, batch, cfg_scan)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=2e-4, rtol=1e-3)
+    assert set(a1) == set(a2)
+
+    # gradients agree too (scan + remat path)
+    cfg_scan_r = dataclasses.replace(cfg_scan, remat=True)
+    g1 = jax.grad(lambda p: M.lm_loss(p, batch, cfg_loop)[0])(params)
+    g2 = jax.grad(lambda p: M.lm_loss(p, batch, cfg_scan_r)[0])(params)
+    l1f = jax.tree_util.tree_leaves(g1)
+    l2f = jax.tree_util.tree_leaves(g2)
+    for x, y in zip(l1f, l2f):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=5e-4, rtol=5e-3)
+
+
+def test_grouping_matches_design():
+    assert get_config("mixtral-8x22b").model.scan_grouping() == (0, 1, 56)
+    assert get_config("jamba-1.5-large-398b").model.scan_grouping() == (0, 8, 9)
+    assert get_config("deepseek-v2-lite-16b").model.scan_grouping() == (1, 1, 26)
+    assert get_config("xlstm-350m").model.scan_grouping() == (0, 8, 3)
+    red = reduced(get_config("olmo-1b").model)
+    assert red.scan_grouping() is None  # reduced configs use the loop

@@ -1,0 +1,135 @@
+"""Integration: training loop behaviour matches the paper's claims at small
+scale; data pipeline determinism; checkpoint roundtrip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (controller_state, load_checkpoint,
+                                 restore_controller, save_checkpoint)
+from repro.configs import AveragingConfig
+from repro.core.controller import ADPSGDController
+from repro.data.pipeline import SyntheticImages, SyntheticTokens
+from repro.models.cnn import cnn_loss, init_cnn
+from repro.optim import get_optimizer, make_lr_schedule
+from repro.runtime.loop import train_periodic
+
+
+@pytest.fixture(scope="module")
+def cnn_setup():
+    data = SyntheticImages(n_samples=256, seed=0)
+    params0 = init_cnn(jax.random.PRNGKey(0), widths=(8, 16))
+    opt = get_optimizer("momentum")
+    lr_fn = make_lr_schedule("step", 0.05, 40, decay_steps=(25,))
+    return data, params0, opt, lr_fn
+
+
+def run(method, cnn_setup, steps=40, **kw):
+    data, params0, opt, lr_fn = cnn_setup
+    cfg = AveragingConfig(method=method, p_init=2, p_const=4,
+                          k_sample_frac=0.3, warmup_full_sync_steps=2, **kw)
+    return train_periodic(
+        loss_fn=cnn_loss, optimizer=opt, params0=params0, n_replicas=4,
+        data_fn=data.batches(n_replicas=4, per_replica_batch=8),
+        lr_fn=lr_fn, avg_cfg=cfg, total_steps=steps, track_variance_every=4)
+
+
+def test_all_methods_decrease_loss(cnn_setup):
+    for m in ("fullsgd", "cpsgd", "adpsgd"):
+        h = run(m, cnn_setup)
+        assert np.mean(h.losses[-5:]) < h.losses[0] * 0.8, m
+
+
+def test_fullsgd_zero_variance(cnn_setup):
+    h = run("fullsgd", cnn_setup, steps=20)
+    assert all(v < 1e-10 for v in h.variances)
+
+
+def test_periodic_has_variance_between_syncs(cnn_setup):
+    h = run("cpsgd", cnn_setup, steps=20)
+    assert max(h.variances) > 0
+
+
+def test_adpsgd_records_sk_and_periods(cnn_setup):
+    h = run("adpsgd", cnn_setup)
+    assert len(h.s_k) == h.n_syncs == len(h.sync_steps)
+    assert all(s >= 0 for s in h.s_k)
+    assert all(p >= 1 for p in h.period_history)
+
+
+def test_adpsgd_fewer_syncs_than_fullsgd(cnn_setup):
+    h = run("adpsgd", cnn_setup)
+    assert h.n_syncs < 40
+
+
+def test_variance_drops_after_lr_decay(cnn_setup):
+    """Paper Fig 1: V_t ~ gamma^2 — the LR drop at step 25 must pull the
+    inter-sync variance down."""
+    h = run("cpsgd", cnn_setup, steps=40)
+    pre = [v for s, v in zip(h.variance_steps, h.variances) if 12 <= s < 24]
+    post = [v for s, v in zip(h.variance_steps, h.variances) if s >= 32]
+    assert pre and post
+    assert np.mean(post) < np.mean(pre)
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_token_pipeline_deterministic():
+    a = SyntheticTokens(64, 32, n_samples=64, seed=3)
+    b = SyntheticTokens(64, 32, n_samples=64, seed=3)
+    fa = a.batches(n_replicas=2, per_replica_batch=4)
+    fb = b.batches(n_replicas=2, per_replica_batch=4)
+    for step in (0, 1, 7, 31):
+        np.testing.assert_array_equal(fa(step)["tokens"], fb(step)["tokens"])
+
+
+def test_pipeline_epoch_reshuffles():
+    d = SyntheticImages(n_samples=64, seed=0)
+    f = d.batches(n_replicas=2, per_replica_batch=4)
+    spe = f.steps_per_epoch
+    e0 = np.asarray(f(0)["labels"]).ravel()
+    e1 = np.asarray(f(spe)["labels"]).ravel()
+    assert not np.array_equal(e0, e1)
+
+
+def test_pipeline_shards_disjoint_within_step():
+    d = SyntheticImages(n_samples=128, seed=0)
+    f = d.batches(n_replicas=4, per_replica_batch=8)
+    imgs = np.asarray(f(0)["images"])
+    flat = imgs.reshape(32, -1)
+    assert len({hash(r.tobytes()) for r in flat}) == 32  # no duplicates
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = {"a": jnp.arange(6.0).reshape(2, 3),
+              "blocks": [{"w": jnp.ones((4,))}, {"w": jnp.zeros((2, 2))}]}
+    opt = {"m": {"a": jnp.ones((2, 3)) * 0.5,
+                 "blocks": [{"w": jnp.zeros((4,))}, {"w": jnp.ones((2, 2))}]}}
+    cfg = AveragingConfig(method="adpsgd")
+    ctrl = ADPSGDController(cfg, 100)
+    ctrl.p, ctrl.c2, ctrl.n_c2 = 7, 1.25, 3
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, params, opt_state=opt, step=42,
+                    controller_state=controller_state(ctrl))
+    p2, o2, meta = load_checkpoint(path)
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_allclose(x, y), params, p2)
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_allclose(x, y), opt, o2)
+    assert meta["step"] == 42
+    c2 = ADPSGDController(cfg, 100)
+    restore_controller(c2, meta["controller"])
+    assert (c2.p, c2.c2, c2.n_c2) == (7, 1.25, 3)
+
+
+def test_lr_schedules():
+    f = make_lr_schedule("step", 0.1, 100, decay_steps=(50, 75))
+    assert f(0) == 0.1 and f(60) == pytest.approx(0.01)
+    assert f(80) == pytest.approx(0.001)
+    w = make_lr_schedule("wsd", 1.0, 100, warmup_steps=10, decay_frac=0.2)
+    assert w(0) < w(9) and w(50) == 1.0 and w(99) < 0.2
+    c = make_lr_schedule("cosine", 1.0, 100)
+    assert c(0) == pytest.approx(1.0) and c(99) < 0.2

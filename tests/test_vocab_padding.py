@@ -1,0 +1,52 @@
+"""Vocab padding (hillclimb D1): padded models are semantically identical —
+padded columns can never be predicted or scored."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfgs():
+    cfg = reduced(get_config("minicpm-2b").model, vocab_size=117)
+    return cfg, dataclasses.replace(cfg, vocab_pad_multiple=16)
+
+
+def test_padded_vocab_rounding():
+    cfg, cfg_p = _cfgs()
+    assert cfg.padded_vocab() == 117
+    assert cfg_p.padded_vocab() == 128
+    assert get_config("minicpm-2b").model.vocab_size % 16 != 0  # the motivation
+
+
+def test_padded_columns_masked_and_finite_loss():
+    _, cfg_p = _cfgs()
+    params = M.init_params(KEY, cfg_p)
+    toks = jax.random.randint(KEY, (2, 32), 0, 117)
+    logits, _ = M.forward(params, {"tokens": toks}, cfg_p)
+    assert logits.shape[-1] == 128
+    assert float(logits[..., 117:].max()) < -1e29
+    loss, _ = M.lm_loss(params, {"tokens": toks}, cfg_p)
+    assert np.isfinite(float(loss))
+
+
+def test_decode_never_selects_padding():
+    _, cfg_p = _cfgs()
+    params = M.init_params(KEY, cfg_p)
+    caches = M.init_caches(cfg_p, 2, 8, dtype=jnp.float32)
+    toks = jax.random.randint(KEY, (2, 1), 0, 117)
+    for _ in range(4):
+        lg, caches = M.decode_step(params, {"tokens": toks}, caches, cfg_p)
+        toks = jnp.argmax(lg[:, -1], -1)[:, None]
+        assert int(toks.max()) < 117
+
+
+def test_unpadded_default_everywhere():
+    for arch in ("olmo-1b", "glm4-9b"):
+        m = get_config(arch).model
+        assert m.padded_vocab() == m.vocab_size
