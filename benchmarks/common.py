@@ -15,7 +15,7 @@ from repro.configs import AveragingConfig
 from repro.data.pipeline import SyntheticImages
 from repro.models.cnn import cnn_loss, init_cnn
 from repro.optim import get_optimizer, make_lr_schedule
-from repro.runtime.loop import TrainHistory, evaluate, train_periodic
+from repro.runtime.engine import TrainerEngine, TrainHistory, evaluate
 
 N_REPLICAS = 8
 PER_REPLICA_BATCH = 16
@@ -38,22 +38,23 @@ def setup():
 def run_method(method: str, p_const: int = 8, p_init: int = 4,
                steps: int = TOTAL_STEPS, n_replicas: int = N_REPLICAS,
                track_every: int = 2, warmup: int = 4,
-               decreasing=(20, 5)) -> TrainHistory:
+               decreasing=(20, 5), inner_period: int = 1) -> TrainHistory:
     data, params0 = setup()
     cfg = AveragingConfig(
         method=method, p_init=p_init, p_const=p_const, k_sample_frac=0.25,
         warmup_full_sync_steps=warmup, decreasing_p0=decreasing[0],
-        decreasing_p1=decreasing[1])
+        decreasing_p1=decreasing[1], inner_period=inner_period)
     lr_fn = make_lr_schedule("step", BASE_LR, steps,
                              decay_steps=(steps // 2, 3 * steps // 4))
-    t0 = time.time()
-    hist = train_periodic(
+    engine = TrainerEngine(
         loss_fn=cnn_loss, optimizer=get_optimizer("momentum"),
         params0=params0, n_replicas=n_replicas,
         data_fn=data.batches(n_replicas=n_replicas,
                              per_replica_batch=PER_REPLICA_BATCH),
         lr_fn=lr_fn, avg_cfg=cfg, total_steps=steps,
         track_variance_every=track_every)
+    t0 = time.time()
+    hist = engine.run()
     hist.wall_s = time.time() - t0
     return hist
 
@@ -67,6 +68,14 @@ def eval_accuracy(hist: TrainHistory) -> float:
 def n_params() -> int:
     _, params0 = setup()
     return sum(x.size for x in jax.tree_util.tree_leaves(params0))
+
+
+def comm_for(method: str, n_nodes: int, steps: int, n_syncs: int,
+             bandwidth: float):
+    """Analytic comm cost via the strategy's own accounting hooks."""
+    from repro.strategies import comm_stats_for
+    return comm_stats_for(method, AveragingConfig(method=method), n_params(),
+                          n_nodes, steps, n_syncs, bandwidth)
 
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:

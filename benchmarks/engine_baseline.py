@@ -1,0 +1,64 @@
+"""Per-strategy engine baseline: steps/s, sync counts and modeled comm
+bytes for every registered strategy on the reduced CIFAR-style config.
+
+    PYTHONPATH=src python -m benchmarks.run --engine-json BENCH_engine.json
+
+The JSON gives later PRs a perf trajectory: a regression in dispatch
+overhead or a change in a strategy's sync schedule shows up as a diff.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import time
+from typing import Dict, List
+
+from benchmarks import common as C
+from repro.core.comm_model import GBPS_100
+from repro.strategies import available_strategies
+
+import numpy as np
+
+STEPS = 60
+
+
+@functools.lru_cache(maxsize=None)   # rows() + write_json share one result:
+def baseline(steps: int = STEPS) -> Dict[str, Dict]:   # run_method is cached
+    # too, so a second call would otherwise record ~0s compile+wall times
+    out: Dict[str, Dict] = {}
+    for name in available_strategies():
+        t0 = time.time()
+        h = C.run_method(name, steps=steps, inner_period=2)
+        wall = time.time() - t0
+        cm = C.comm_for(name, C.N_REPLICAS, steps, h.n_syncs, GBPS_100)
+        out[name] = {
+            "steps": steps,
+            "steps_per_s": round(steps / max(h.wall_s, 1e-9), 2),
+            "wall_s": round(h.wall_s, 3),
+            "compile_plus_wall_s": round(wall, 3),
+            "n_syncs": h.n_syncs,
+            "n_inner_syncs": len(h.inner_sync_steps),
+            "final_loss": round(float(np.mean(h.losses[-8:])), 4),
+            "mean_period": round(steps / max(1, h.n_syncs), 2),
+            "comm_bytes_per_node": cm.bytes_per_node * cm.n_events,
+            "modeled_comm_s_100gbps": cm.time_s,
+        }
+    return out
+
+
+def rows(steps: int = STEPS) -> List[str]:
+    out = []
+    for name, r in baseline(steps).items():
+        out.append(C.csv_row(
+            f"engine_{name}", 1e6 / max(r["steps_per_s"], 1e-9),
+            f"syncs={r['n_syncs']};loss={r['final_loss']};"
+            f"comm_bytes={r['comm_bytes_per_node']:.3e}"))
+    return out
+
+
+def write_json(path: str, steps: int = STEPS) -> None:
+    with open(path, "w") as f:
+        json.dump({"config": {"n_replicas": C.N_REPLICAS,
+                              "per_replica_batch": C.PER_REPLICA_BATCH,
+                              "steps": steps, "base_lr": C.BASE_LR},
+                   "strategies": baseline(steps)}, f, indent=2, sort_keys=True)

@@ -20,7 +20,7 @@ from typing import Dict, List
 import numpy as np
 
 from benchmarks import common as C
-from repro.core.comm_model import GBPS_10, GBPS_100, method_comm, speedup_vs_fullsgd
+from repro.core.comm_model import GBPS_10, GBPS_100
 
 Rows = List[str]
 
@@ -92,14 +92,13 @@ def table1_accuracy() -> Rows:
 def fig4c_execution_time() -> Rows:
     rows = []
     n = C.N_REPLICAS
-    npar = C.n_params()
     steps = C.TOTAL_STEPS
     ha = C.run_method("adpsgd")
     step_s = ha.wall_s / steps          # measured compute per step
     for bw, tag in ((GBPS_100, "100gbps"), (GBPS_10, "10gbps")):
         for m, syncs in [("fullsgd", steps), ("qsgd", steps),
                          ("cpsgd", steps // 8), ("adpsgd", ha.n_syncs)]:
-            cm = method_comm(m, npar, n, steps, syncs, bw)
+            cm = C.comm_for(m, n, steps, syncs, bw)
             rows.append(C.csv_row(
                 f"fig4c_{m}_{tag}", step_s * 1e6,
                 f"comm_s={cm.time_s:.4e};comp_s={step_s * steps:.3e};"
@@ -109,16 +108,15 @@ def fig4c_execution_time() -> Rows:
 
 def fig6_speedups() -> Rows:
     rows = []
-    npar = C.n_params()
     steps = C.TOTAL_STEPS
     ha = C.run_method("adpsgd")
     step_s = max(ha.wall_s / steps / C.N_REPLICAS, 1e-4)  # per-worker compute
     for nodes in (2, 4, 8, 16):
         for bw, tag in ((GBPS_100, "100gbps"), (GBPS_10, "10gbps")):
             # time vs single node: single = steps*step_s*nodes (serial work)
-            full = method_comm("fullsgd", npar, nodes, steps, steps, bw)
-            adp = method_comm("adpsgd", npar, nodes, steps,
-                              max(1, ha.n_syncs), bw)
+            full = C.comm_for("fullsgd", nodes, steps, steps, bw)
+            adp = C.comm_for("adpsgd", nodes, steps,
+                             max(1, ha.n_syncs), bw)
             t1 = steps * step_s * nodes
             sp_full = t1 / (steps * step_s + full.time_s)
             sp_adp = t1 / (steps * step_s + adp.time_s)
@@ -132,11 +130,10 @@ def fig6_speedups() -> Rows:
 def fig7_qsgd_comparison() -> Rows:
     hq = C.run_method("qsgd")
     ha = C.run_method("adpsgd")
-    npar = C.n_params()
-    bq = method_comm("qsgd", npar, C.N_REPLICAS, C.TOTAL_STEPS,
-                     C.TOTAL_STEPS, GBPS_100)
-    ba = method_comm("adpsgd", npar, C.N_REPLICAS, C.TOTAL_STEPS,
-                     ha.n_syncs, GBPS_100)
+    bq = C.comm_for("qsgd", C.N_REPLICAS, C.TOTAL_STEPS,
+                    C.TOTAL_STEPS, GBPS_100)
+    ba = C.comm_for("adpsgd", C.N_REPLICAS, C.TOTAL_STEPS,
+                    ha.n_syncs, GBPS_100)
     tot_q = bq.bytes_per_node * bq.n_events
     tot_a = ba.bytes_per_node * ba.n_events
     return [C.csv_row(

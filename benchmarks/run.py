@@ -17,11 +17,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--engine-json", default=None, metavar="PATH",
+                    help="also write the per-strategy engine baseline "
+                         "(steps/s, syncs, comm bytes) to PATH")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, paper_figures
+    from benchmarks import engine_baseline, kernel_bench, paper_figures
 
     jobs = [(fn.__name__, fn) for fn in paper_figures.ALL]
+    jobs.append(("engine_baseline", engine_baseline.rows))
     jobs.append(("kernel_bench", kernel_bench.bench))
     if args.only:
         keep = args.only.split(",")
@@ -50,6 +54,13 @@ def main() -> None:
                 for row in rows:
                     print(row)
         except Exception:  # noqa: BLE001
+            traceback.print_exc()
+    if args.engine_json:
+        try:
+            engine_baseline.write_json(args.engine_json)
+            print(f"# engine baseline -> {args.engine_json}")
+        except Exception:  # noqa: BLE001
+            failed += 1
             traceback.print_exc()
     print(f"# total {time.time() - t_start:.1f}s, {failed} failures")
     if failed:

@@ -6,11 +6,14 @@ accuracy ordering, and print modeled execution times at 100/10 Gbps.
     PYTHONPATH=src python examples/paper_cifar.py [--steps 120]
 """
 import argparse
+import os
+import sys
 
 import numpy as np
 
-from benchmarks import common as C
-from repro.core.comm_model import GBPS_10, GBPS_100, method_comm
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import common as C  # noqa: E402
+from repro.core.comm_model import GBPS_10, GBPS_100
 
 
 def main():
@@ -25,12 +28,17 @@ def main():
     results = {}
     for method, kw in [("fullsgd", {}), ("cpsgd", dict(p_const=8)),
                        ("adpsgd", {}), ("qsgd", {}),
-                       ("decreasing", dict(decreasing=(16, 4)))]:
+                       ("decreasing", dict(decreasing=(16, 4))),
+                       # beyond-paper strategies via the same registry:
+                       ("hier_adpsgd", dict(inner_period=2)),
+                       ("qsgd_periodic", {})]:
         h = C.run_method(method, steps=steps, **kw)
         acc = C.eval_accuracy(h)
         results[method] = (h, acc)
-        print(f"{method:11s} loss={np.mean(h.losses[-8:]):.4f} "
-              f"acc={acc:.4f} syncs={h.n_syncs:4d} "
+        extra = (f" inner={len(h.inner_sync_steps)}"
+                 if h.inner_sync_steps else "")
+        print(f"{method:13s} loss={np.mean(h.losses[-8:]):.4f} "
+              f"acc={acc:.4f} syncs={h.n_syncs:4d}{extra} "
               f"wavg Var[W_k] (Eq.9) = {h.weighted_avg_variance():.3e}")
 
     ha = results["adpsgd"][0]
@@ -46,14 +54,13 @@ def main():
           f"(paper claim: adpsgd smaller -> {wa < wc})")
 
     print("\n-- Fig 4c: modeled wall-clock (comm model, ring all-reduce) --")
-    npar = C.n_params()
     step_s = ha.wall_s / steps
     for bw, tag in ((GBPS_100, "100Gbps"), (GBPS_10, " 10Gbps")):
         line = [tag]
         tf = None
         for m in ("fullsgd", "qsgd", "cpsgd", "adpsgd"):
             syncs = results[m][0].n_syncs
-            cm = method_comm(m, npar, C.N_REPLICAS, steps, syncs, bw)
+            cm = C.comm_for(m, C.N_REPLICAS, steps, syncs, bw)
             total = steps * step_s + cm.time_s
             if m == "fullsgd":
                 tf = total

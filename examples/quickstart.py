@@ -11,7 +11,7 @@ from repro.data.pipeline import SyntheticTokens
 from repro.launch.steps import make_loss_fn
 from repro.models import model as M
 from repro.optim import get_optimizer, make_lr_schedule
-from repro.runtime.loop import train_periodic
+from repro.runtime.engine import TrainerEngine
 
 STEPS = 100
 REPLICAS = 8
@@ -21,7 +21,9 @@ cfg = reduced(get_config("olmo-1b").model, n_layers=2, d_model=128,
 data = SyntheticTokens(cfg.vocab_size, seq_len=64, n_samples=2048)
 params0 = M.init_params(jax.random.PRNGKey(0), cfg)
 
-hist = train_periodic(
+# The engine is strategy-agnostic: swap method="adpsgd" for any registered
+# strategy (cpsgd / fullsgd / qsgd / hier_adpsgd / qsgd_periodic / ...).
+engine = TrainerEngine(
     loss_fn=make_loss_fn(cfg),
     optimizer=get_optimizer("momentum"),
     params0=params0,
@@ -33,6 +35,7 @@ hist = train_periodic(
     total_steps=STEPS,
     track_variance_every=5,
 )
+hist = engine.run()
 
 print(f"loss: {hist.losses[0]:.3f} -> {np.mean(hist.losses[-10:]):.3f}")
 print(f"syncs: {hist.n_syncs}/{STEPS} steps "

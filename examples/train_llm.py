@@ -20,7 +20,7 @@ from repro.data.pipeline import SyntheticTokens
 from repro.launch.steps import make_loss_fn
 from repro.models import model as M
 from repro.optim import get_optimizer, make_lr_schedule
-from repro.runtime.loop import train_periodic
+from repro.runtime.engine import TrainerEngine
 
 SIZES = {
     "tiny": dict(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
@@ -54,8 +54,7 @@ def main():
 
     data = SyntheticTokens(cfg.vocab_size, s["seq"],
                            n_samples=args.replicas * args.batch * 64)
-    t0 = time.time()
-    hist = train_periodic(
+    engine = TrainerEngine(
         loss_fn=make_loss_fn(cfg),
         optimizer=get_optimizer("adamw"),
         params0=params0,
@@ -70,6 +69,8 @@ def main():
         total_steps=args.steps,
         track_variance_every=max(1, args.steps // 40),
     )
+    t0 = time.time()
+    hist = engine.run()
     dt = time.time() - t0
     tok = args.steps * args.replicas * args.batch * s["seq"]
     print(f"{args.steps} steps / {tok:,} tokens in {dt:.0f}s "

@@ -75,15 +75,29 @@ def load_checkpoint(path: str) -> Tuple[Pytree, Optional[Pytree], Dict]:
 
 
 def controller_state(ctrl) -> Dict:
-    d = {"cnt": ctrl.cnt, "n_syncs": ctrl.n_syncs}
-    for attr in ("p", "c2", "n_c2"):
-        if hasattr(ctrl, attr):
-            d[attr] = getattr(ctrl, attr)
+    d = {"n_syncs": ctrl.n_syncs}
+    d.update(ctrl.state_dict())
     return d
 
 
 def restore_controller(ctrl, state: Dict) -> None:
-    ctrl.cnt = state.get("cnt", 0)
-    for attr in ("p", "c2", "n_c2"):
-        if attr in state and hasattr(ctrl, attr):
-            setattr(ctrl, attr, state[attr])
+    ctrl.load_state_dict(state)
+
+
+def strategy_state(strategy) -> Dict:
+    """Serializable adaptive state of a ``CommunicationStrategy`` (includes
+    its controller's Algorithm-2 state, if any)."""
+    d = {"strategy": strategy.name}
+    d.update(strategy.state_dict())
+    return d
+
+
+def restore_strategy(strategy, state: Dict) -> None:
+    """Restore ``strategy_state`` into a fresh strategy: the resumed run
+    must continue the identical sync schedule."""
+    saved = state.get("strategy")
+    if saved and saved != strategy.name:
+        raise ValueError(
+            f"checkpoint holds state for strategy '{saved}', "
+            f"got '{strategy.name}'")
+    strategy.load_state_dict(state)

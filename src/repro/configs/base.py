@@ -224,7 +224,9 @@ class ParallelismPlan:
 class AveragingConfig:
     """Paper technique hyper-parameters (Algorithm 2 + baselines)."""
 
-    method: str = "adpsgd"        # adpsgd | cpsgd | fullsgd | qsgd | decreasing
+    # any name registered in repro/strategies: adpsgd | cpsgd | fullsgd |
+    # qsgd | decreasing | hier_adpsgd | qsgd_periodic | ...
+    method: str = "adpsgd"
     p_init: int = 4               # initial averaging period
     p_const: int = 8              # CPSGD constant period
     k_sample_frac: float = 0.25   # K_s = frac * K  (paper: 0.25 CIFAR, 0.2 ImageNet)
@@ -238,6 +240,10 @@ class AveragingConfig:
     # decreasing-period baseline of Wang & Joshi (paper §V-B shows harmful)
     decreasing_p0: int = 20
     decreasing_p1: int = 5
+    # hierarchical (hier_adpsgd): in-pod sync period and replica-group size
+    # (0 -> half the replicas form one group)
+    inner_period: int = 1
+    group_size: int = 0
 
 
 @dataclass(frozen=True)

@@ -108,11 +108,16 @@ def sync_replicas(W: Pytree, opt_state: Optional[Pytree] = None, *,
         W_new = jax.tree_util.tree_map(
             lambda x, m: jnp.broadcast_to(m, x.shape).astype(x.dtype), W, means)
     if opt_state is not None and sync_momentum:
-        opt_state = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(
-                jnp.mean(x.astype(jnp.float32), 0, keepdims=True),
-                x.shape).astype(x.dtype), opt_state)
+        opt_state = sync_opt_state(opt_state)
     return W_new, opt_state, S_k
+
+
+def sync_opt_state(opt_state: Pytree) -> Pytree:
+    """Average the optimizer state across replicas (beyond-paper knob)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(
+            jnp.mean(x.astype(jnp.float32), 0, keepdims=True),
+            x.shape).astype(x.dtype), opt_state)
 
 
 def make_full_step(loss_fn: LossFn, optimizer: Optimizer):

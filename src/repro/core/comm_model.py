@@ -27,10 +27,18 @@ def ring_allreduce_bytes(n_params: int, n_nodes: int, bytes_per_el: int = 4) -> 
     return 2.0 * (n_nodes - 1) / n_nodes * n_params * bytes_per_el
 
 
+def comm_time(bytes_per_event: float, n_events: int, n_nodes: int,
+              bandwidth: float) -> float:
+    """Wall-clock of ``n_events`` collectives of ``bytes_per_event`` each —
+    the generic accounting hook the strategy API builds its ``comm_stats``
+    on (``CommunicationStrategy.comm_bytes_per_sync`` supplies the bytes)."""
+    lat = LATENCY_S * 2 * (n_nodes - 1)
+    return n_events * (bytes_per_event / bandwidth + lat)
+
+
 def method_comm(method: str, n_params: int, n_nodes: int, total_steps: int,
                 n_syncs: int, bandwidth: float, qsgd_bits: int = 8) -> CommStats:
     """Total communication for a training run, per node."""
-    lat = LATENCY_S * 2 * (n_nodes - 1)
     if method in ("fullsgd",):
         per = ring_allreduce_bytes(n_params, n_nodes)
         ev = total_steps
@@ -45,8 +53,8 @@ def method_comm(method: str, n_params: int, n_nodes: int, total_steps: int,
         ev = total_steps
     else:
         raise ValueError(method)
-    t = ev * (per / bandwidth + lat)
-    return CommStats(per, ev, t)
+    # prefer strategies.comm_stats_for for new code
+    return CommStats(per, ev, comm_time(per, ev, n_nodes, bandwidth))
 
 
 def speedup_vs_fullsgd(method: str, n_params: int, n_nodes: int,

@@ -59,6 +59,19 @@ class PeriodController:
         t = total_steps or self.total_steps
         return t / max(1, self.n_syncs)
 
+    # Adaptive state for checkpoint/resume: restoring must continue the
+    # identical sync schedule (Algorithm 2 is stateful across syncs).
+    _STATE_ATTRS = ("cnt",)
+
+    def state_dict(self) -> dict:
+        return {a: getattr(self, a) for a in self._STATE_ATTRS
+                if hasattr(self, a)}
+
+    def load_state_dict(self, state: dict) -> None:
+        for a in self._STATE_ATTRS:
+            if a in state and hasattr(self, a):
+                setattr(self, a, state[a])
+
 
 class FullSyncController(PeriodController):
     """FULLSGD: synchronize every iteration (p = 1)."""
@@ -114,6 +127,7 @@ class ADPSGDController(PeriodController):
     """
 
     name = "adpsgd"
+    _STATE_ATTRS = ("cnt", "p", "c2", "n_c2")
 
     def __init__(self, cfg: AveragingConfig, total_steps: int):
         super().__init__(cfg, total_steps)
@@ -151,11 +165,14 @@ class HierarchicalADPSGDController(ADPSGDController):
     refers to the *outer* sync; query ``inner_sync_now`` separately."""
 
     name = "hier_adpsgd"
+    _STATE_ATTRS = ("cnt", "p", "c2", "n_c2", "_inner_cnt")
 
     def __init__(self, cfg: AveragingConfig, total_steps: int,
-                 inner_period: int = 1):
+                 inner_period: Optional[int] = None):
         super().__init__(cfg, total_steps)
-        self.inner_period = inner_period
+        if inner_period is None:
+            inner_period = getattr(cfg, "inner_period", 1)
+        self.inner_period = max(1, inner_period)
         self._inner_cnt = 0
         self.inner_sync_steps: List[int] = []
 
@@ -167,12 +184,20 @@ class HierarchicalADPSGDController(ADPSGDController):
             return True
         return False
 
+    def reset_inner(self) -> None:
+        """Restart the in-group drift clock (an outer sync equalizes every
+        group, subsuming the pending inner sync)."""
+        self._inner_cnt = 0
+
 
 def make_controller(cfg: AveragingConfig, total_steps: int) -> PeriodController:
-    return {
-        "adpsgd": ADPSGDController,
-        "cpsgd": ConstantPeriodController,
-        "fullsgd": FullSyncController,
-        "qsgd": FullSyncController,       # QSGD communicates every step
-        "decreasing": DecreasingPeriodController,
-    }[cfg.method](cfg, total_steps)
+    """Controller for ``cfg.method``, resolved through the strategy
+    registry's ``controller_cls`` (the single source of truth; late import
+    because strategies import this module).  Every-step strategies declare
+    no controller — legacy callers get the period-1 FullSyncController the
+    seed loop provided."""
+    from repro.strategies import get_strategy_cls
+    cls = getattr(get_strategy_cls(cfg.method), "controller_cls", None)
+    if cls is None:
+        cls = FullSyncController
+    return cls(cfg, total_steps)

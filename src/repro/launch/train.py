@@ -3,37 +3,37 @@
     PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --method adpsgd \
         --steps 200 --replicas 4 --reduced
 
-On this container it runs reduced configs on the host device; on a real
-cluster the same driver jits against ``make_production_mesh()`` with the
-shardings from launch/sharding.py (``--mesh prod``).
+``--method`` accepts any name registered in ``repro/strategies`` (the five
+paper methods plus hier_adpsgd, qsgd_periodic, and anything a plugin
+registers).  On this container it runs reduced configs on the host device;
+on a real cluster the same driver jits against ``make_production_mesh()``
+with the shardings from launch/sharding.py (``--mesh prod``).
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.io import controller_state, save_checkpoint
+from repro.checkpoint.io import save_checkpoint, strategy_state
 from repro.configs import AveragingConfig, get_config, reduced
-from repro.core.controller import make_controller
 from repro.data.pipeline import SyntheticTokens
 from repro.launch.steps import make_loss_fn
 from repro.models import model as M
 from repro.optim import get_optimizer, make_lr_schedule
-from repro.runtime.loop import train_periodic
+from repro.runtime.engine import TrainerEngine
+from repro.strategies import available_strategies, make_strategy
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--method", default="adpsgd",
-                    choices=["adpsgd", "cpsgd", "fullsgd", "qsgd", "decreasing"])
+                    choices=available_strategies())
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4, help="per-replica batch")
@@ -42,6 +42,7 @@ def main():
     ap.add_argument("--p-init", type=int, default=2)
     ap.add_argument("--p-const", type=int, default=8)
     ap.add_argument("--warmup-sync", type=int, default=8)
+    ap.add_argument("--inner-period", type=int, default=1)
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
@@ -52,7 +53,8 @@ def main():
     cfg = reduced(run.model, max_seq_len=args.seq) if args.reduced else run.model
     avg_cfg = AveragingConfig(
         method=args.method, p_init=args.p_init, p_const=args.p_const,
-        warmup_full_sync_steps=args.warmup_sync, k_sample_frac=0.25)
+        warmup_full_sync_steps=args.warmup_sync, k_sample_frac=0.25,
+        inner_period=args.inner_period)
     lr = args.lr if args.lr is not None else min(run.learning_rate, 0.05)
     lr_fn = make_lr_schedule(
         "step", lr, args.steps,
@@ -66,14 +68,15 @@ def main():
                            per_replica_batch=args.batch)
     params0 = M.init_params(jax.random.PRNGKey(args.seed), cfg)
     loss_fn = make_loss_fn(cfg)
-    ctrl = make_controller(avg_cfg, args.steps)
+    strategy = make_strategy(avg_cfg, args.steps)
 
-    t0 = time.time()
-    hist = train_periodic(
+    engine = TrainerEngine(
         loss_fn=loss_fn, optimizer=opt, params0=params0,
         n_replicas=args.replicas, data_fn=data_fn, lr_fn=lr_fn,
-        avg_cfg=avg_cfg, total_steps=args.steps, controller=ctrl,
+        avg_cfg=avg_cfg, total_steps=args.steps, strategy=strategy,
         track_variance_every=max(1, args.steps // 50), seed=args.seed)
+    t0 = time.time()
+    hist = engine.run()
     dt = time.time() - t0
 
     print(f"[{args.arch} / {args.method}] {args.steps} steps in {dt:.1f}s")
@@ -82,12 +85,15 @@ def main():
     print(f"  syncs={hist.n_syncs} mean_period="
           f"{args.steps / max(1, hist.n_syncs):.2f} "
           f"final_p={hist.period_history[-1] if hist.period_history else 1}")
+    if hist.inner_sync_steps:
+        print(f"  inner_syncs={len(hist.inner_sync_steps)}")
     print(f"  weighted-avg Var[W_k] (paper Eq.9) = "
           f"{hist.weighted_avg_variance():.3e}")
     if args.ckpt:
         from repro.core.averaging import replica_mean
         save_checkpoint(args.ckpt, replica_mean(hist.final_W),
-                        step=args.steps, controller_state=controller_state(ctrl))
+                        step=args.steps,
+                        controller_state=strategy_state(strategy))
         print(f"  checkpoint -> {args.ckpt}")
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
@@ -96,6 +102,7 @@ def main():
                        "losses": hist.losses, "s_k": hist.s_k,
                        "sync_steps": hist.sync_steps,
                        "periods": hist.period_history,
+                       "inner_sync_steps": hist.inner_sync_steps,
                        "variances": hist.variances,
                        "variance_steps": hist.variance_steps}, f)
         print(f"  history -> {args.out}")

@@ -1,52 +1,27 @@
-"""Training loop: controller-dispatched periodic averaging.
+"""Back-compat shim over the strategy-driven engine.
 
-One loop serves every method in the paper (FULLSGD / CPSGD / ADPSGD /
-QSGD / decreasing-period): the controller decides when the sync program
-runs; the loop records losses, the variance probe S_k, the period
-trajectory (paper Fig 3) and, optionally, the per-iteration parameter
-variance Var[W_k] (paper Fig 1/2).
+The seed's ``train_periodic`` (one loop, per-method string branches) is
+replaced by ``runtime/engine.py``'s ``TrainerEngine`` + the pluggable
+``repro/strategies`` registry.  This module keeps the old entry point for
+one release: it builds an engine and runs it.  New code should construct
+``TrainerEngine`` directly.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import AveragingConfig
-from repro.core import averaging as avg
-from repro.core import qsgd as qsgd_mod
-from repro.core.controller import PeriodController, make_controller
+from repro.core.controller import PeriodController
 from repro.optim.optimizers import Optimizer
+from repro.runtime.engine import (  # noqa: F401  (re-exported API)
+    TrainerEngine, TrainHistory, evaluate,
+)
+from repro.strategies import make_strategy
+from repro.strategies.periodic import PeriodicAveragingStrategy
 
 Pytree = Any
-
-
-@dataclass
-class TrainHistory:
-    method: str
-    losses: List[float] = field(default_factory=list)
-    variances: List[float] = field(default_factory=list)       # Var[W_k] samples
-    variance_steps: List[int] = field(default_factory=list)
-    s_k: List[float] = field(default_factory=list)             # probe at syncs
-    sync_steps: List[int] = field(default_factory=list)
-    period_history: List[int] = field(default_factory=list)
-    lrs: List[float] = field(default_factory=list)
-    wall_s: float = 0.0
-    n_syncs: int = 0
-    final_W: Optional[Pytree] = None
-    final_opt: Optional[Pytree] = None
-
-    def weighted_avg_variance(self) -> float:
-        """Paper Eq. 9: Σ γ_k Var[W_k] / Σ γ_j over the sampled steps."""
-        if not self.variances:
-            return 0.0
-        g = np.array([self.lrs[min(s, len(self.lrs) - 1)]
-                      for s in self.variance_steps])
-        return float(np.sum(g * np.array(self.variances)) / np.sum(g))
 
 
 def train_periodic(*,
@@ -62,64 +37,17 @@ def train_periodic(*,
                    seed: int = 0,
                    controller: Optional[PeriodController] = None,
                    ) -> TrainHistory:
-    """Simulates n_replicas local-SGD workers (stacked replica axis — on one
-    device for experiments, sharded over the mesh in production)."""
-    ctrl = controller or make_controller(avg_cfg, total_steps)
-    W = avg.stack_replicas(params0, n_replicas)
-    opt_state = jax.vmap(optimizer.init)(W)
-
-    local_step = jax.jit(avg.make_local_step(loss_fn, optimizer))
-    full_step = jax.jit(avg.make_full_step(loss_fn, optimizer))
-    qsgd_step = jax.jit(qsgd_mod.make_qsgd_step(
-        loss_fn, optimizer, avg_cfg.qsgd_bits))
-    sync = jax.jit(lambda W, o: avg.sync_replicas(
-        W, o, sync_momentum=avg_cfg.sync_momentum))
-    var_fn = jax.jit(avg.parameter_variance)
-
-    hist = TrainHistory(method=avg_cfg.method)
-    key = jax.random.PRNGKey(seed + 17)
-    t0 = time.time()
-    for k in range(total_steps):
-        lr = lr_fn(k)
-        hist.lrs.append(lr)
-        batch = data_fn(k)
-        if avg_cfg.method == "qsgd":
-            key, sub = jax.random.split(key)
-            W, opt_state, metrics = qsgd_step(W, opt_state, batch, lr, sub)
-        elif avg_cfg.method == "fullsgd":
-            W, opt_state, metrics = full_step(W, opt_state, batch, lr)
-        else:
-            W, opt_state, metrics = local_step(W, opt_state, batch, lr)
-        hist.losses.append(float(metrics["loss"]))
-
-        if track_variance_every and (k % track_variance_every == 0):
-            hist.variances.append(float(var_fn(W)))
-            hist.variance_steps.append(k)
-
-        if avg_cfg.method not in ("fullsgd", "qsgd") and ctrl.sync_now(k):
-            W, opt_state, s_k = sync(W, opt_state)
-            s_k = float(s_k)
-            ctrl.observe(k, lr, s_k)
-            hist.s_k.append(s_k)
-            hist.sync_steps.append(k)
-            hist.period_history.append(ctrl.period)
-    hist.wall_s = time.time() - t0
-    hist.n_syncs = len(hist.sync_steps) if avg_cfg.method not in (
-        "fullsgd", "qsgd") else total_steps
-    hist.final_W = W
-    hist.final_opt = opt_state
-    return hist
-
-
-def evaluate(loss_fn, W: Pytree, batches) -> Dict[str, float]:
-    """Evaluate the replica-averaged model."""
-    params = avg.replica_mean(W)
-    f = jax.jit(loss_fn)
-    tot: Dict[str, float] = {}
-    n = 0
-    for b in batches:
-        _, aux = f(params, b)
-        for kk, v in aux.items():
-            tot[kk] = tot.get(kk, 0.0) + float(v)
-        n += 1
-    return {k: v / max(n, 1) for k, v in tot.items()}
+    """Deprecated: delegate to ``TrainerEngine`` via the strategy registry.
+    ``controller``, if given, is installed into the strategy (periodic
+    strategies only) so callers that pre-built one keep working."""
+    strategy = make_strategy(avg_cfg, total_steps)
+    if controller is not None and isinstance(strategy, PeriodicAveragingStrategy):
+        # every-step strategies (fullsgd/qsgd) never consulted the
+        # controller in the seed loop either — ignore it for those.
+        strategy.set_controller(controller)
+    engine = TrainerEngine(
+        loss_fn=loss_fn, optimizer=optimizer, params0=params0,
+        n_replicas=n_replicas, data_fn=data_fn, lr_fn=lr_fn,
+        avg_cfg=avg_cfg, total_steps=total_steps, strategy=strategy,
+        track_variance_every=track_variance_every, seed=seed)
+    return engine.run()

@@ -1,0 +1,19 @@
+"""Pluggable communication strategies (see base.py for the API).
+
+Importing this package registers every built-in strategy:
+fullsgd / cpsgd / adpsgd / decreasing / qsgd / hier_adpsgd / qsgd_periodic.
+"""
+from repro.strategies.base import (  # noqa: F401
+    CommunicationStrategy, available_strategies, comm_stats_for,
+    get_strategy_cls, make_strategy, register_strategy,
+)
+from repro.strategies.periodic import (  # noqa: F401
+    AdaptivePeriodStrategy, ConstantPeriodStrategy, DecreasingPeriodStrategy,
+    FullSGDStrategy, PeriodicAveragingStrategy,
+)
+from repro.strategies.quantized import (  # noqa: F401
+    QSGDPeriodicStrategy, QSGDStrategy,
+)
+from repro.strategies.hierarchical import (  # noqa: F401
+    HierarchicalADPSGDStrategy,
+)

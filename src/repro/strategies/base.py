@@ -1,0 +1,159 @@
+"""The pluggable communication-strategy API.
+
+The paper's thesis is that the communication *policy* — when and what the
+replicas synchronize — is the variable worth optimizing.  A
+``CommunicationStrategy`` therefore owns everything policy-specific:
+
+* ``compile(loss_fn, optimizer)`` — build the strategy's jitted device
+  programs (local step, sync, quantized sync, ...).  Programs all share one
+  signature ``(W, opt_state, batch, lr, key) -> (W, opt_state, info)`` so
+  the engine can dispatch them without knowing what they are.
+* ``actions(k)`` — the host-side per-iteration decision: which program
+  names to dispatch at iteration k, in order.  This absorbs the old
+  ``PeriodController`` hierarchy; decisions are plain python and stay off
+  the device critical path (both programs are pre-compiled and dispatch is
+  asynchronous — DESIGN.md §2).
+* ``observe(k, lr, s_k)`` — feedback after a sync: the measured variance
+  probe S_k drives adaptive policies (Algorithm 2 lines 14-19).
+* ``comm_bytes_per_sync(n_params, n_nodes)`` — accounting hook feeding the
+  analytic model in ``core/comm_model.py``.
+* ``state_dict() / load_state_dict()`` — adaptive state (p, C2, counters)
+  for checkpoint/resume; restoring must continue the same sync schedule.
+
+Strategies register by name (``@register_strategy``); adding a new
+communication scheme is one registered class, never an edit to the engine.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple, Type
+
+from repro.configs.base import AveragingConfig
+from repro.core.comm_model import CommStats, comm_time, ring_allreduce_bytes
+
+Pytree = Any
+# program: (W, opt_state, batch, lr, key) -> (W, opt_state, info)
+#   info["loss"]        -> the engine records a training-loss sample
+#   info["s_k"]         -> the program was a sync; engine feeds observe()
+#   info["inner_sync"]  -> hierarchical inner (in-pod) sync marker
+Program = Callable[..., Tuple[Pytree, Optional[Pytree], Dict[str, Any]]]
+
+STEP = "step"
+SYNC = "sync"
+INNER_SYNC = "inner_sync"
+
+
+class CommunicationStrategy:
+    """Base class; concrete strategies override the hooks they need."""
+
+    name = "base"
+
+    def __init__(self, cfg: AveragingConfig, total_steps: int):
+        self.cfg = cfg
+        self.total_steps = total_steps
+        self.programs: Dict[str, Program] = {}
+        self._comm_events = 0
+
+    # ------------------------------------------------------------- programs
+    def compile(self, loss_fn, optimizer,
+                avg_cfg: Optional[AveragingConfig] = None) -> None:
+        """Build ``self.programs``.  Subclasses implement
+        ``_build_programs``.  ``avg_cfg``, if given, must equal the
+        constructor config — the schedule state was built from that config
+        in ``__init__``, so a different one here would silently desync
+        programs from schedule."""
+        if avg_cfg is not None and avg_cfg != self.cfg:
+            raise ValueError(
+                f"strategy '{self.name}' was constructed with a different "
+                "AveragingConfig; rebuild it via make_strategy(avg_cfg, ...)")
+        self.programs = self._build_programs(loss_fn, optimizer)
+
+    def _build_programs(self, loss_fn, optimizer) -> Dict[str, Program]:
+        raise NotImplementedError
+
+    def dispatch(self, action: str, W, opt_state, batch, lr, key):
+        return self.programs[action](W, opt_state, batch, lr, key)
+
+    # ------------------------------------------------------------- decisions
+    def actions(self, k: int) -> Tuple[str, ...]:
+        """Program names to dispatch at iteration k, in order."""
+        raise NotImplementedError
+
+    def observe(self, k: int, lr: float, s_k: float) -> None:
+        """Feedback after the sync program ran at iteration k."""
+
+    # ------------------------------------------------------------- telemetry
+    @property
+    def period(self) -> int:
+        """Current averaging period (1 for every-step strategies)."""
+        return 1
+
+    @property
+    def n_comm_events(self) -> int:
+        """Communication events so far (syncs, or steps for every-step
+        strategies) — drives ``TrainHistory.n_syncs``."""
+        return self._comm_events
+
+    # ------------------------------------------------------------ accounting
+    def comm_bytes_per_sync(self, n_params: int, n_nodes: int) -> float:
+        """Bytes moved per node per communication event (ring all-reduce
+        unless the strategy compresses)."""
+        return ring_allreduce_bytes(n_params, n_nodes)
+
+    def comm_events_for(self, total_steps: int, n_syncs: int) -> int:
+        """How many communication events a run of ``total_steps`` with
+        ``n_syncs`` recorded syncs performed."""
+        return n_syncs
+
+    def comm_stats(self, n_params: int, n_nodes: int, total_steps: int,
+                   n_syncs: int, bandwidth: float) -> CommStats:
+        per = self.comm_bytes_per_sync(n_params, n_nodes)
+        ev = self.comm_events_for(total_steps, n_syncs)
+        return CommStats(per, ev, comm_time(per, ev, n_nodes, bandwidth))
+
+    # ------------------------------------------------------------ checkpoint
+    def state_dict(self) -> Dict[str, Any]:
+        return {"comm_events": self._comm_events}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        self._comm_events = int(state.get("comm_events", 0))
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_STRATEGIES: Dict[str, Type[CommunicationStrategy]] = {}
+
+
+def register_strategy(cls: Type[CommunicationStrategy]):
+    """Class decorator: register under ``cls.name``."""
+    if not cls.name or cls.name == "base":
+        raise ValueError(f"{cls.__name__} needs a unique .name")
+    _STRATEGIES[cls.name] = cls
+    return cls
+
+
+def get_strategy_cls(name: str) -> Type[CommunicationStrategy]:
+    if name not in _STRATEGIES:
+        raise KeyError(
+            f"unknown strategy '{name}'; available: {available_strategies()}")
+    return _STRATEGIES[name]
+
+
+def make_strategy(cfg: AveragingConfig, total_steps: int,
+                  name: Optional[str] = None, **kw) -> CommunicationStrategy:
+    """Instantiate the strategy named ``name`` (default: ``cfg.method``)."""
+    return get_strategy_cls(name or cfg.method)(cfg, total_steps, **kw)
+
+
+def available_strategies() -> List[str]:
+    return sorted(_STRATEGIES)
+
+
+def comm_stats_for(name: str, cfg: AveragingConfig, n_params: int,
+                   n_nodes: int, total_steps: int, n_syncs: int,
+                   bandwidth: float) -> CommStats:
+    """Analytic communication cost of a run, via the strategy's own
+    accounting hooks (replaces string dispatch in ``method_comm``)."""
+    s = make_strategy(cfg, total_steps, name=name)
+    return s.comm_stats(n_params, n_nodes, total_steps, n_syncs, bandwidth)

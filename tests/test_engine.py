@@ -1,0 +1,348 @@
+"""Strategy registry + TrainerEngine: parity with the seed loop, end-to-end
+runs for every registered strategy, comm accounting, and checkpoint/resume
+of strategy (controller) state."""
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (load_checkpoint, restore_strategy,
+                                 save_checkpoint, strategy_state)
+from repro.configs import AveragingConfig
+from repro.core import averaging as avg
+from repro.core.comm_model import GBPS_100, method_comm
+from repro.core.controller import make_controller
+from repro.data.pipeline import SyntheticImages
+from repro.models.cnn import cnn_loss, init_cnn
+from repro.optim import get_optimizer, make_lr_schedule
+from repro.runtime.engine import TrainerEngine
+from repro.strategies import (available_strategies, comm_stats_for,
+                              get_strategy_cls, make_strategy)
+
+STEPS = 40
+REPLICAS = 4
+
+
+@pytest.fixture(scope="module")
+def cnn_setup():
+    data = SyntheticImages(n_samples=256, seed=0)
+    params0 = init_cnn(jax.random.PRNGKey(0), widths=(8, 16))
+    opt = get_optimizer("momentum")
+    lr_fn = make_lr_schedule("step", 0.05, STEPS, decay_steps=(25,))
+    return data, params0, opt, lr_fn
+
+
+def make_engine(cnn_setup, method, steps=STEPS, strategy=None, **cfg_kw):
+    data, params0, opt, lr_fn = cnn_setup
+    base = dict(method=method, p_init=2, p_const=4, k_sample_frac=0.25,
+                warmup_full_sync_steps=2)
+    base.update(cfg_kw)
+    cfg = AveragingConfig(**base)
+    return TrainerEngine(
+        loss_fn=cnn_loss, optimizer=opt, params0=params0,
+        n_replicas=REPLICAS,
+        data_fn=data.batches(n_replicas=REPLICAS, per_replica_batch=8),
+        lr_fn=lr_fn, avg_cfg=cfg, total_steps=steps, strategy=strategy)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_all_methods():
+    for name in ("fullsgd", "cpsgd", "adpsgd", "decreasing", "qsgd",
+                 "hier_adpsgd", "qsgd_periodic"):
+        assert name in available_strategies()
+        assert get_strategy_cls(name).name == name
+
+
+def test_unknown_strategy_raises():
+    with pytest.raises(KeyError):
+        make_strategy(AveragingConfig(method="nope"), 10)
+
+
+# ---------------------------------------------------------------------------
+# Parity: the engine reproduces the seed loop exactly
+# ---------------------------------------------------------------------------
+
+
+def _seed_loop(cnn_setup, avg_cfg, total_steps):
+    """Verbatim re-implementation of the pre-refactor string-branched loop
+    (ADPSGD path) — the engine must reproduce it bit-for-bit."""
+    data, params0, optimizer, lr_fn = cnn_setup
+    data_fn = data.batches(n_replicas=REPLICAS, per_replica_batch=8)
+    ctrl = make_controller(avg_cfg, total_steps)
+    W = avg.stack_replicas(params0, REPLICAS)
+    opt_state = jax.vmap(optimizer.init)(W)
+    local_step = jax.jit(avg.make_local_step(cnn_loss, optimizer))
+    sync = jax.jit(lambda w, o: avg.sync_replicas(
+        w, o, sync_momentum=avg_cfg.sync_momentum))
+    losses, s_ks, sync_steps, periods = [], [], [], []
+    for k in range(total_steps):
+        lr = lr_fn(k)
+        W, opt_state, metrics = local_step(W, opt_state, data_fn(k), lr)
+        losses.append(float(metrics["loss"]))
+        if ctrl.sync_now(k):
+            W, opt_state, s_k = sync(W, opt_state)
+            s_k = float(s_k)
+            ctrl.observe(k, lr, s_k)
+            s_ks.append(s_k)
+            sync_steps.append(k)
+            periods.append(ctrl.period)
+    return losses, s_ks, sync_steps, periods, W
+
+
+def test_engine_matches_seed_loop_adpsgd(cnn_setup):
+    cfg = AveragingConfig(method="adpsgd", p_init=2, p_const=4,
+                          k_sample_frac=0.25, warmup_full_sync_steps=2)
+    losses, s_ks, sync_steps, periods, W = _seed_loop(cnn_setup, cfg, STEPS)
+    h = make_engine(cnn_setup, "adpsgd").run()
+    assert h.sync_steps == sync_steps
+    assert h.period_history == periods
+    np.testing.assert_allclose(h.s_k, s_ks)
+    np.testing.assert_allclose(h.losses, losses)
+    for a, b in zip(jax.tree_util.tree_leaves(h.final_W),
+                    jax.tree_util.tree_leaves(W)):
+        np.testing.assert_allclose(a, b)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end per strategy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["fullsgd", "cpsgd", "adpsgd",
+                                    "decreasing", "qsgd", "hier_adpsgd",
+                                    "qsgd_periodic"])
+def test_every_strategy_trains(cnn_setup, method):
+    h = make_engine(cnn_setup, method, inner_period=2).run()
+    assert len(h.losses) == STEPS
+    assert np.mean(h.losses[-5:]) < h.losses[0] * 0.8, method
+    assert h.n_syncs > 0
+
+
+def test_fullsgd_counts_every_step_as_comm(cnn_setup):
+    h = make_engine(cnn_setup, "fullsgd", steps=10).run()
+    assert h.n_syncs == 10
+    assert h.sync_steps == []          # the averaging program never runs
+
+
+def test_hier_adpsgd_inner_syncs_run(cnn_setup):
+    h = make_engine(cnn_setup, "hier_adpsgd", inner_period=2,
+                    group_size=2).run()
+    assert len(h.inner_sync_steps) > 0
+    # outer syncs subsume inner ones
+    assert not set(h.inner_sync_steps) & set(h.sync_steps)
+    assert h.n_syncs < STEPS
+
+
+def test_qsgd_periodic_composes(cnn_setup):
+    """The composed strategy syncs on the adaptive schedule but moves
+    qsgd_bits/32 of the bytes per sync."""
+    h = make_engine(cnn_setup, "qsgd_periodic").run()
+    assert 0 < h.n_syncs < STEPS
+    n_par = 1000
+    full = make_strategy(AveragingConfig(method="adpsgd"), STEPS)
+    comp = make_strategy(AveragingConfig(method="qsgd_periodic"), STEPS)
+    assert comp.comm_bytes_per_sync(n_par, REPLICAS) == pytest.approx(
+        full.comm_bytes_per_sync(n_par, REPLICAS) / 4)
+
+
+def test_engine_has_no_method_branches():
+    """Acceptance criterion: runtime/ is strategy-agnostic."""
+    import os
+    import repro.runtime as rt
+    root = list(rt.__path__)[0]
+    for fn in os.listdir(root):
+        if fn.endswith(".py"):
+            src = open(os.path.join(root, fn)).read()
+            assert '== "qsgd"' not in src and '== "fullsgd"' not in src, fn
+
+
+# ---------------------------------------------------------------------------
+# Comm accounting parity with the legacy analytic model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["fullsgd", "cpsgd", "adpsgd",
+                                    "decreasing", "qsgd"])
+def test_comm_stats_match_legacy_model(method):
+    cfg = AveragingConfig(method=method)
+    new = comm_stats_for(method, cfg, int(1e6), 16, 100, 20, GBPS_100)
+    old = method_comm(method, int(1e6), 16, 100, 20, GBPS_100)
+    assert new.bytes_per_node == pytest.approx(old.bytes_per_node)
+    assert new.n_events == old.n_events
+    assert new.time_s == pytest.approx(old.time_s)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint / resume of strategy state (satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["adpsgd", "hier_adpsgd"])
+def test_resume_continues_identical_schedule(cnn_setup, tmp_path, method):
+    """Save mid-run, restore into a fresh strategy, and the adaptive period
+    p, C2, and sync schedule must continue exactly as uninterrupted."""
+    kw = dict(inner_period=2, group_size=2) if method == "hier_adpsgd" else {}
+    full = make_engine(cnn_setup, method, **kw)
+    h_full = full.run()
+
+    half = make_engine(cnn_setup, method, **kw)
+    half.run(num_steps=STEPS // 2)
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, half.W, opt_state=half.opt_state, step=STEPS // 2,
+                    controller_state=strategy_state(half.strategy))
+
+    resumed = make_engine(cnn_setup, method, **kw)
+    W, opt_state, meta = load_checkpoint(path)
+    assert meta["step"] == STEPS // 2
+    resumed.load_state(W, opt_state, strategy_state=meta["controller"])
+    # adaptive state restored exactly
+    assert resumed.strategy.controller.p == half.strategy.controller.p
+    assert resumed.strategy.controller.c2 == pytest.approx(
+        half.strategy.controller.c2)
+    h_res = resumed.run(start_step=STEPS // 2)
+
+    full_tail = [s for s in h_full.sync_steps if s >= STEPS // 2]
+    assert h_res.sync_steps == full_tail
+    n_tail = len(full_tail)
+    assert h_res.period_history == h_full.period_history[-n_tail:] if n_tail \
+        else h_res.period_history == []
+    np.testing.assert_allclose(
+        h_res.losses, h_full.losses[STEPS // 2:], rtol=1e-5)
+    assert resumed.strategy.controller.p == full.strategy.controller.p
+    assert resumed.strategy.controller.c2 == pytest.approx(
+        full.strategy.controller.c2, rel=1e-6)
+
+
+def test_controller_reads_cfg_inner_period():
+    from repro.core.controller import HierarchicalADPSGDController
+    cfg = AveragingConfig(method="hier_adpsgd", inner_period=4)
+    c = make_controller(cfg, 100)
+    assert isinstance(c, HierarchicalADPSGDController)
+    assert c.inner_period == 4
+    assert sum(c.inner_sync_now(k) for k in range(20)) == 5
+    # explicit constructor arg still wins over the config
+    assert HierarchicalADPSGDController(cfg, 100, inner_period=2).inner_period == 2
+
+
+def test_weighted_avg_variance_on_resumed_history(cnn_setup):
+    """Eq. 9 must weight by the lr at each sampled step even when the
+    history starts mid-run (lrs[0] is step start_step, not step 0)."""
+    e = make_engine(cnn_setup, "cpsgd")
+    e.run(num_steps=STEPS // 2)
+    res = make_engine(cnn_setup, "cpsgd")
+    res.load_state(e.W, e.opt_state)
+    res.callbacks.append(__import__("repro.runtime.engine",
+                                    fromlist=["VarianceProbe"]).VarianceProbe(4))
+    h = res.run(start_step=STEPS // 2)
+    assert h.lr_start_step == STEPS // 2
+    # lr decays at step 25: samples after that must be weighted by 0.005
+    _, _, _, lr_fn = cnn_setup
+    idx = np.array(h.variance_steps) - h.lr_start_step
+    np.testing.assert_allclose(np.array(h.lrs)[idx],
+                               [lr_fn(s) for s in h.variance_steps])
+    assert np.isfinite(h.weighted_avg_variance())
+
+
+def test_load_state_rejects_export_checkpoint(cnn_setup):
+    e = make_engine(cnn_setup, "cpsgd")
+    with pytest.raises(ValueError, match="export-only"):
+        e.load_state(avg.replica_mean(e.W))
+
+
+def test_params0less_engine_resume(cnn_setup):
+    """The advertised resume path: an engine built without params0 must
+    guard export checkpoints and init opt_state when the checkpoint has
+    none."""
+    data, params0, opt, lr_fn = cnn_setup
+    donor = make_engine(cnn_setup, "cpsgd")
+    cfg = AveragingConfig(method="cpsgd", p_init=2, p_const=4,
+                          k_sample_frac=0.25, warmup_full_sync_steps=2)
+
+    def fresh():
+        return TrainerEngine(
+            loss_fn=cnn_loss, optimizer=opt, n_replicas=REPLICAS,
+            data_fn=data.batches(n_replicas=REPLICAS, per_replica_batch=8),
+            lr_fn=lr_fn, avg_cfg=cfg, total_steps=STEPS)
+
+    with pytest.raises(ValueError, match="export-only"):
+        fresh().load_state(avg.replica_mean(donor.W))
+    e = fresh()
+    e.load_state(donor.W)          # no opt_state in the "checkpoint"
+    h = e.run(num_steps=4)
+    assert len(h.losses) == 4 and np.isfinite(h.losses).all()
+
+
+def test_checkpointer_callback_saves_post_sync_state(cnn_setup, tmp_path):
+    """Checkpointer fires at iteration end: a checkpoint written on a sync
+    step must hold the synced W (zero replica variance) together with the
+    post-observe strategy state, and resume identically from it."""
+    from repro.runtime.engine import Checkpointer
+    path = str(tmp_path / "cb_ckpt")
+    # cpsgd p=4, warmup=2: k=5 is a sync step and (5+1) % 6 == 0 fires it
+    e = make_engine(cnn_setup, "cpsgd")
+    e.callbacks.append(Checkpointer(path, every=6))
+    h_full = e.run()
+
+    res = make_engine(cnn_setup, "cpsgd")
+    W, opt_state, meta = load_checkpoint(path)
+    # the last callback save (k+1 multiple of 6 <= STEPS) resumes cleanly
+    res.load_state(W, opt_state, strategy_state=meta["controller"])
+    h_res = res.run(start_step=meta["step"])
+    np.testing.assert_allclose(h_res.losses, h_full.losses[meta["step"]:],
+                               rtol=1e-5)
+    assert h_res.sync_steps == [s for s in h_full.sync_steps
+                                if s >= meta["step"]]
+    # and a sync-step checkpoint is post-sync: re-save at step 6 to check
+    e2 = make_engine(cnn_setup, "cpsgd")
+    e2.callbacks.append(Checkpointer(str(tmp_path / "ck6"), every=6))
+    e2.run(num_steps=6)
+    W6, _, _ = load_checkpoint(str(tmp_path / "ck6"))
+    assert float(avg.parameter_variance(W6)) < 1e-10
+
+
+def test_conflicting_avg_cfg_and_strategy_raises(cnn_setup):
+    data, params0, opt, lr_fn = cnn_setup
+    s = make_strategy(AveragingConfig(method="cpsgd", p_const=4), STEPS)
+    with pytest.raises(ValueError, match="conflicts"):
+        TrainerEngine(
+            loss_fn=cnn_loss, optimizer=opt, params0=params0, n_replicas=4,
+            data_fn=data.batches(n_replicas=4, per_replica_batch=8),
+            lr_fn=lr_fn, avg_cfg=AveragingConfig(method="cpsgd", p_const=9),
+            total_steps=STEPS, strategy=s)
+
+
+def test_resumed_history_n_syncs_is_per_segment(cnn_setup, tmp_path):
+    half = make_engine(cnn_setup, "cpsgd")
+    h1 = half.run(num_steps=STEPS // 2)
+    path = str(tmp_path / "ck")
+    save_checkpoint(path, half.W, opt_state=half.opt_state, step=STEPS // 2,
+                    controller_state=strategy_state(half.strategy))
+    res = make_engine(cnn_setup, "cpsgd")
+    W, opt_state, meta = load_checkpoint(path)
+    res.load_state(W, opt_state, strategy_state=meta["controller"])
+    h2 = res.run(start_step=STEPS // 2)
+    assert h2.n_syncs == len(h2.sync_steps)              # per-segment
+    assert h1.n_syncs + h2.n_syncs == len(h1.sync_steps) + len(h2.sync_steps)
+
+
+def test_strategy_state_name_mismatch_raises():
+    s = make_strategy(AveragingConfig(method="adpsgd"), 10)
+    state = strategy_state(s)
+    other = make_strategy(AveragingConfig(method="cpsgd"), 10)
+    with pytest.raises(ValueError):
+        restore_strategy(other, state)
+
+
+def test_train_periodic_shim_still_works(cnn_setup):
+    from repro.runtime.loop import train_periodic
+    data, params0, opt, lr_fn = cnn_setup
+    cfg = AveragingConfig(method="cpsgd", p_const=4,
+                          warmup_full_sync_steps=2)
+    h = train_periodic(
+        loss_fn=cnn_loss, optimizer=opt, params0=params0, n_replicas=4,
+        data_fn=data.batches(n_replicas=4, per_replica_batch=8),
+        lr_fn=lr_fn, avg_cfg=cfg, total_steps=20, track_variance_every=4)
+    assert len(h.losses) == 20 and h.n_syncs > 0

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as stf
+import pytest
+
+pytest.importorskip("hypothesis")  # listed in requirements.txt; optional here
+from hypothesis import given, settings, strategies as stf  # noqa: E402
 
 from repro.configs import AveragingConfig
 from repro.core import averaging as avg
