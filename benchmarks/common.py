@@ -38,7 +38,8 @@ def setup():
 def run_method(method: str, p_const: int = 8, p_init: int = 4,
                steps: int = TOTAL_STEPS, n_replicas: int = N_REPLICAS,
                track_every: int = 2, warmup: int = 4,
-               decreasing=(20, 5), inner_period: int = 1) -> TrainHistory:
+               decreasing=(20, 5), inner_period: int = 1,
+               backend: str = "vmap") -> TrainHistory:
     data, params0 = setup()
     cfg = AveragingConfig(
         method=method, p_init=p_init, p_const=p_const, k_sample_frac=0.25,
@@ -51,7 +52,7 @@ def run_method(method: str, p_const: int = 8, p_init: int = 4,
         params0=params0, n_replicas=n_replicas,
         data_fn=data.batches(n_replicas=n_replicas,
                              per_replica_batch=PER_REPLICA_BATCH),
-        lr_fn=lr_fn, avg_cfg=cfg, total_steps=steps,
+        lr_fn=lr_fn, avg_cfg=cfg, total_steps=steps, backend=backend,
         track_variance_every=track_every)
     t0 = time.time()
     hist = engine.run()

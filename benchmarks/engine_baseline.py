@@ -1,10 +1,16 @@
 """Per-strategy engine baseline: steps/s, sync counts and modeled comm
-bytes for every registered strategy on the reduced CIFAR-style config.
+bytes for every registered strategy on the reduced CIFAR-style config, on
+every registered execution backend.
 
     PYTHONPATH=src python -m benchmarks.run --engine-json BENCH_engine.json
 
 The JSON gives later PRs a perf trajectory: a regression in dispatch
 overhead or a change in a strategy's sync schedule shows up as a diff.
+Top-level numbers per strategy are the vmap backend's (continuity with the
+PR-1 baseline); the ``backends`` sub-table holds the per-backend columns
+(on this container the mesh backend runs over however many host devices
+XLA_FLAGS forces — 1 by default, so its delta is pure shard_map dispatch
+overhead).
 """
 from __future__ import annotations
 
@@ -14,6 +20,7 @@ import time
 from typing import Dict, List
 
 from benchmarks import common as C
+from repro.backends import available_backends
 from repro.core.comm_model import GBPS_100
 from repro.strategies import available_strategies
 
@@ -27,21 +34,34 @@ def baseline(steps: int = STEPS) -> Dict[str, Dict]:   # run_method is cached
     # too, so a second call would otherwise record ~0s compile+wall times
     out: Dict[str, Dict] = {}
     for name in available_strategies():
-        t0 = time.time()
-        h = C.run_method(name, steps=steps, inner_period=2)
-        wall = time.time() - t0
+        per_backend: Dict[str, Dict] = {}
+        h = None                      # the vmap history anchors the top level
+        for bk in available_backends():
+            t0 = time.time()
+            hb = C.run_method(name, steps=steps, inner_period=2, backend=bk)
+            wall = time.time() - t0
+            per_backend[bk] = {
+                "steps_per_s": round(steps / max(hb.wall_s, 1e-9), 2),
+                "wall_s": round(hb.wall_s, 3),
+                "compile_plus_wall_s": round(wall, 3),
+                "n_syncs": hb.n_syncs,
+                "final_loss": round(float(np.mean(hb.losses[-8:])), 4),
+            }
+            if bk == "vmap":
+                h = hb
         cm = C.comm_for(name, C.N_REPLICAS, steps, h.n_syncs, GBPS_100)
         out[name] = {
             "steps": steps,
-            "steps_per_s": round(steps / max(h.wall_s, 1e-9), 2),
-            "wall_s": round(h.wall_s, 3),
-            "compile_plus_wall_s": round(wall, 3),
+            "steps_per_s": per_backend["vmap"]["steps_per_s"],
+            "wall_s": per_backend["vmap"]["wall_s"],
+            "compile_plus_wall_s": per_backend["vmap"]["compile_plus_wall_s"],
             "n_syncs": h.n_syncs,
             "n_inner_syncs": len(h.inner_sync_steps),
-            "final_loss": round(float(np.mean(h.losses[-8:])), 4),
+            "final_loss": per_backend["vmap"]["final_loss"],
             "mean_period": round(steps / max(1, h.n_syncs), 2),
             "comm_bytes_per_node": cm.bytes_per_node * cm.n_events,
             "modeled_comm_s_100gbps": cm.time_s,
+            "backends": per_backend,
         }
     return out
 

@@ -45,4 +45,21 @@ def bench() -> List[str]:
     us_r = _time(jax.jit(lambda a: ref.mean_and_sqdev_ref(a)), w)
     rows.append(f"kernel_param_variance,{us_k:.1f},"
                 f"ref_us={us_r:.1f};bytes={w.nbytes:.3e};replicas=16")
+
+    # the decision point for VmapBackend(use_kernel=...): whole-sync wall
+    # time with the fused Pallas mean+sqdev kernel vs the jnp path.  On CPU
+    # (interpret mode) the kernel loses by orders of magnitude — hence the
+    # backend's default of kernel-on-TPU-only; on TPU this same row shows
+    # the fusion winning on bandwidth-bound buffer sizes.
+    from repro.core.averaging import sync_replicas
+    for logn in (14, 18):
+        W = {"w": jax.random.normal(key, (8, 1 << logn))}
+        us_k = _time(jax.jit(
+            lambda t: sync_replicas(t, use_kernel=True)[::2]), W)
+        us_r = _time(jax.jit(
+            lambda t: sync_replicas(t, use_kernel=False)[::2]), W)
+        rows.append(
+            f"kernel_sync_replicas_n{1 << logn},{us_k:.1f},"
+            f"ref_us={us_r:.1f};kernel_wins={us_k < us_r};"
+            f"bytes={W['w'].nbytes:.3e};replicas=8")
     return rows

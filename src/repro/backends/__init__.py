@@ -1,0 +1,12 @@
+"""Pluggable execution backends (see base.py for the API).
+
+Importing this package registers the built-in backends: ``vmap`` (host
+device, PR-1 behavior, bit-exact) and ``mesh`` (``shard_map`` over a real
+device mesh, replica axis sharded over ``data``/``pod``).
+"""
+from repro.backends.base import (  # noqa: F401
+    ExecutionBackend, available_backends, get_backend_cls, make_backend,
+    register_backend, resolve_backend,
+)
+from repro.backends.vmap import VmapBackend  # noqa: F401
+from repro.backends.mesh import MeshBackend  # noqa: F401

@@ -1,0 +1,207 @@
+"""The pluggable execution-backend API.
+
+A ``CommunicationStrategy`` decides *when* and *what* replicas exchange; an
+``ExecutionBackend`` decides *where the replicas live* and *how the exchange
+is executed*.  The backend owns device placement, the layout of the leading
+replica axis, and the collective primitives, so a strategy compiles the same
+policy against any topology:
+
+* ``VmapBackend``  — all R replicas on the host's default device, programs
+  built with ``vmap`` + ``jnp.mean`` (the PR-1 behavior, bit-exact).
+* ``MeshBackend``  — the replica axis sharded over the ``data``/``pod`` axes
+  of a real ``jax.sharding.Mesh`` (``launch/mesh.py``), programs built with
+  ``shard_map`` and syncs lowered to ``jax.lax.pmean``/``psum`` on the
+  replica mesh axes.
+
+Strategies never hand-roll ``vmap`` or ``jnp.mean(axis=0)``; they ask the
+backend for pre-built device programs:
+
+* ``replica_step(loss_fn, optimizer)`` — independent local SGD step per
+  replica, **zero replica-axis collectives** (Algorithm 1 lines 3-4).
+* ``all_mean(sync_momentum=...)``      — the parameter average plus the
+  paper's variance probe S_k (Algorithm 2 lines 10-11); the only program
+  with a full replica-axis collective.
+* ``quantized_all_mean(bits)``         — QSGD-quantized delta-from-anchor
+  exchange (qsgd_periodic composition).
+* ``inner_mean(group_size)``           — in-group (in-pod) partial average
+  for the hierarchical strategy.
+* ``mean_delta()`` / ``apply_delta()`` — deferred correction pair for
+  DaSGD-style delayed averaging.
+* ``full_step`` / ``qsgd_step``        — every-step gradient-averaging
+  baselines (FULLSGD, QSGD).
+
+Placement hooks (``put_params`` / ``put_opt`` / ``put_replicated`` /
+``init_opt_state``) let the engine and the checkpoint layer stay
+backend-agnostic: a checkpoint saved under one backend restores under any
+other (``checkpoint/io.py`` saves host arrays; the engine re-``put``s them
+through the active backend).
+
+Backends register by name (``@register_backend``); ``--backend=vmap|mesh``
+on the train driver selects one.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Type
+
+import jax
+
+from repro.core import averaging as avg
+
+Pytree = Any
+
+
+class ExecutionBackend:
+    """Base class; concrete backends override placement + program builders.
+
+    ``use_kernel`` selects the fused Pallas mean+sqdev kernel inside
+    ``all_mean`` where the backend supports it: ``True``/``False`` force it,
+    ``None`` (default) enables it only where profitable — on TPU, where the
+    Mosaic kernel fuses the two passes; on CPU interpret-mode it loses badly
+    (see ``benchmarks/kernel_bench.py``).
+    """
+
+    name = "base"
+
+    def __init__(self, *, use_kernel: Optional[bool] = None):
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        self.use_kernel = bool(use_kernel)
+        self.n_replicas: Optional[int] = None
+
+    # ------------------------------------------------------------- topology
+    def bind(self, n_replicas: int) -> None:
+        """Fix the replica count this backend will lay out.  Called once by
+        the engine before any placement; backends validate divisibility
+        against their device topology here."""
+        self.n_replicas = int(n_replicas)
+
+    def describe(self) -> Dict[str, Any]:
+        """Telemetry: where the replicas live (benchmarks record this)."""
+        return {"backend": self.name, "n_replicas": self.n_replicas,
+                "n_devices": 1}
+
+    # ------------------------------------------------------------ placement
+    def put_params(self, W: Pytree) -> Pytree:
+        """Place a replica-stacked parameter pytree on this backend's
+        devices (identity for the host backend)."""
+        return W
+
+    def put_opt(self, opt_state: Pytree, W: Pytree) -> Pytree:
+        """Place a replica-stacked optimizer state (mirrors ``W``'s
+        layout; scalar counters replicate)."""
+        return opt_state
+
+    def put_replicated(self, tree: Pytree) -> Pytree:
+        """Place an *unstacked* pytree replicated on every device (e.g. the
+        qsgd_periodic full-precision anchor)."""
+        return tree
+
+    def get(self, tree: Pytree) -> Pytree:
+        """Fetch to host numpy (checkpoint save path)."""
+        return jax.device_get(tree)
+
+    def init_opt_state(self, optimizer, W: Pytree) -> Pytree:
+        return self.put_opt(jax.vmap(optimizer.init)(W), W)
+
+    def collapse(self, W: Pytree) -> Pytree:
+        """Replica mean without the probe — a host-side convenience (anchor
+        seeding, export checkpoints)."""
+        return avg.replica_mean(W)
+
+    # ------------------------------------------------- program builders
+    # Every builder returns a compiled callable; signatures mirror the
+    # core/averaging.py programs so VmapBackend is a thin wrapper.
+
+    def replica_step(self, loss_fn, optimizer) -> Callable:
+        """(W, opt_state, batch, lr) -> (W, opt_state, metrics); no
+        replica-axis collectives."""
+        raise NotImplementedError
+
+    def full_step(self, loss_fn, optimizer) -> Callable:
+        """(W, opt_state, batch, lr) -> (W, opt_state, metrics); gradients
+        all-reduced every call (FULLSGD)."""
+        raise NotImplementedError
+
+    def qsgd_step(self, loss_fn, optimizer, bits: int) -> Callable:
+        """(W, opt_state, batch, lr, key) -> (W, opt_state, metrics);
+        quantized gradient exchange every call (QSGD)."""
+        raise NotImplementedError
+
+    def all_mean(self, *, sync_momentum: bool = False) -> Callable:
+        """(W, opt_state) -> (W, opt_state, s_k): the replica average and
+        the paper's variance probe."""
+        raise NotImplementedError
+
+    def inner_mean(self, group_size: int) -> Callable:
+        """(W) -> W averaged within contiguous replica groups of
+        ``group_size`` (hierarchical in-pod sync)."""
+        raise NotImplementedError
+
+    def quantized_all_mean(self, bits: int) -> Callable:
+        """(W, anchor, key) -> (W, new_anchor, s_k): QSGD-quantized deltas
+        from the full-precision anchor, averaged and re-applied."""
+        raise NotImplementedError
+
+    def opt_mean(self) -> Callable:
+        """(opt_state) -> opt_state averaged across replicas."""
+        raise NotImplementedError
+
+    def mean_delta(self) -> Callable:
+        """(W) -> (delta, s_k) with ``delta_i = mean(W) - W_i`` (stacked):
+        the correction DaSGD applies ``delay`` steps later."""
+        raise NotImplementedError
+
+    def apply_delta(self) -> Callable:
+        """(W, delta) -> W + delta, elementwise (no collectives — the
+        collective already happened in ``mean_delta``)."""
+        if not hasattr(self, "_apply_delta_fn"):
+            import jax.numpy as jnp
+
+            def apply(W, delta):
+                return jax.tree_util.tree_map(
+                    lambda w, d: (w.astype(jnp.float32) + d).astype(w.dtype),
+                    W, delta)
+            self._apply_delta_fn = jax.jit(apply)
+        return self._apply_delta_fn
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_BACKENDS: Dict[str, Type[ExecutionBackend]] = {}
+
+
+def register_backend(cls: Type[ExecutionBackend]):
+    """Class decorator: register under ``cls.name``."""
+    if not cls.name or cls.name == "base":
+        raise ValueError(f"{cls.__name__} needs a unique .name")
+    _BACKENDS[cls.name] = cls
+    return cls
+
+
+def get_backend_cls(name: str) -> Type[ExecutionBackend]:
+    if name not in _BACKENDS:
+        raise KeyError(
+            f"unknown backend '{name}'; available: {available_backends()}")
+    return _BACKENDS[name]
+
+
+def make_backend(name: str, **kw) -> ExecutionBackend:
+    return get_backend_cls(name)(**kw)
+
+
+def available_backends() -> List[str]:
+    return sorted(_BACKENDS)
+
+
+def resolve_backend(backend) -> ExecutionBackend:
+    """None -> default VmapBackend; str -> registry; instance -> itself."""
+    if backend is None:
+        backend = "vmap"
+    if isinstance(backend, str):
+        return make_backend(backend)
+    if not isinstance(backend, ExecutionBackend):
+        raise TypeError(f"expected backend name or ExecutionBackend, "
+                        f"got {type(backend).__name__}")
+    return backend

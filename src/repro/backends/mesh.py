@@ -1,0 +1,374 @@
+"""Multi-device backend: replica axis sharded over a real device mesh.
+
+The replica axis of every stacked pytree is laid out over the mesh's
+``data`` (and, multi-pod, ``pod``) axes using the stacked PartitionSpecs
+from ``launch/sharding.py``; programs are built with ``shard_map`` so each
+device advances its local replica chunk independently, and the strategy
+syncs lower to real collectives — ``jax.lax.pmean``/``psum`` over the
+replica mesh axes.  This is where the paper's communication savings become
+physical: between syncs no *parameter* tensor ever crosses the replica
+axes — the local step's only collective is the scalar metrics mean
+(loss/grad-norm telemetry, a handful of floats for the engine's history),
+so skipping a sync genuinely skips the parameter all-reduce.  Moving even
+that scalar pmean off the step is a ROADMAP item.
+
+Replicas are whole-model copies here (``replica_ddp`` placement: parameters
+replicated inside a replica, batch split across replicas).  Composing
+tensor-parallel sharding *inside* each replica over a ``model`` axis is the
+documented next step (DESIGN.md §5) — the spec machinery in
+``launch/sharding.py`` already expresses it.
+
+On this CPU container the mesh is whatever ``XLA_FLAGS=
+--xla_force_host_platform_device_count=N`` provides (tests force 8); on a
+TPU pod the same code takes ``launch/mesh.py``'s production mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.backends.base import ExecutionBackend, register_backend
+from repro.configs.base import ModelConfig, ParallelismPlan
+from repro.core import averaging as avg
+from repro.core import qsgd as qsgd_mod
+from repro.launch import mesh as mesh_mod
+from repro.launch import sharding as shard_rules
+
+Pytree = Any
+
+_tm = jax.tree_util.tree_map
+_leaves = jax.tree_util.tree_leaves
+
+
+@register_backend
+class MeshBackend(ExecutionBackend):
+    """Replica axis over the mesh's ``data``/``pod`` axes, ``shard_map``
+    programs, ``lax.pmean`` syncs."""
+
+    name = "mesh"
+
+    def __init__(self, mesh: Optional[Mesh] = None, *,
+                 model_cfg: Optional[ModelConfig] = None,
+                 multi_pod: bool = False,
+                 use_kernel: Optional[bool] = None):
+        if use_kernel:
+            # the fused mean+sqdev kernel is a per-device program over the
+            # full replica axis; mesh syncs lower to pmean over chunks —
+            # refuse rather than silently ignore --sync-kernel on
+            raise NotImplementedError(
+                "use_kernel is a VmapBackend option; MeshBackend lowers "
+                "syncs to lax.pmean (use --sync-kernel auto/off with "
+                "--backend mesh)")
+        super().__init__(use_kernel=False)
+        if mesh is None:
+            mesh = mesh_mod.make_host_mesh()
+        self.mesh = mesh
+        sizes = dict(mesh.shape)
+        self.replica_axes: Tuple[str, ...] = tuple(
+            a for a in ("pod", "data") if a in mesh.axis_names)
+        if not self.replica_axes:
+            raise ValueError(
+                f"mesh {mesh.axis_names} has no replica axis "
+                "('data' or 'pod'); see launch/mesh.py")
+        self.n_replica_devices = int(
+            np.prod([sizes[a] for a in self.replica_axes]))
+        self._entry = (self.replica_axes if len(self.replica_axes) > 1
+                       else self.replica_axes[0])
+        self._model_cfg = model_cfg or ModelConfig()
+        # replica_ddp placement: each replica is a full model copy — the
+        # replica axis is the only sharded dim (launch/sharding.py)
+        self._plan = ParallelismPlan(plan="replica_ddp")
+        self._cache: Dict[Any, Any] = {}
+
+    # ------------------------------------------------------------- topology
+    def bind(self, n_replicas: int) -> None:
+        if n_replicas % self.n_replica_devices:
+            raise ValueError(
+                f"n_replicas={n_replicas} not divisible by the mesh's "
+                f"{self.n_replica_devices} replica devices "
+                f"(axes {self.replica_axes} of {dict(self.mesh.shape)})")
+        super().bind(n_replicas)
+
+    def describe(self):
+        return {"backend": self.name, "n_replicas": self.n_replicas,
+                "n_devices": len(self.mesh.devices.reshape(-1)),
+                "mesh": dict(self.mesh.shape),
+                "replica_axes": list(self.replica_axes)}
+
+    # ------------------------------------------------------------ placement
+    def put_params(self, W: Pytree) -> Pytree:
+        specs = shard_rules.param_specs(
+            self._model_cfg, W, self.mesh, self._plan,
+            replica_axes=self.replica_axes, stacked=True)
+        return jax.device_put(W, shard_rules.named(self.mesh, specs))
+
+    def put_opt(self, opt_state: Pytree, W: Pytree) -> Pytree:
+        if not _leaves(opt_state):
+            return opt_state
+        pspecs = shard_rules.param_specs(
+            self._model_cfg, W, self.mesh, self._plan,
+            replica_axes=self.replica_axes, stacked=True)
+        ospecs = shard_rules.opt_specs(
+            self._model_cfg, opt_state, pspecs, self.mesh, self._plan,
+            replica_axes=self.replica_axes, stacked=True)
+        return jax.device_put(opt_state, shard_rules.named(self.mesh, ospecs))
+
+    def put_replicated(self, tree: Pytree) -> Pytree:
+        return jax.device_put(tree, NamedSharding(self.mesh, P()))
+
+    def init_opt_state(self, optimizer, W: Pytree) -> Pytree:
+        return self.put_opt(jax.vmap(optimizer.init)(W), W)
+
+    # ----------------------------------------------------------- internals
+    def _stacked(self, tree: Pytree) -> Pytree:
+        """Per-leaf spec: leading replica dim over the replica axes (specs
+        shorter than the leaf rank pad with None — remaining dims stay
+        replicated inside the replica)."""
+        return _tm(lambda x: P(self._entry), tree)
+
+    def _replicated(self, tree: Pytree) -> Pytree:
+        return _tm(lambda x: P(), tree)
+
+    def _cached(self, kind: str, trees, build):
+        key = (kind, tuple(
+            (jax.tree_util.tree_structure(t),
+             tuple(np.shape(x) for x in _leaves(t)))
+            for t in trees))
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = self._cache[key] = build()
+        return fn
+
+    def _shmap(self, chunk, in_specs, out_specs):
+        return jax.jit(shard_map(chunk, mesh=self.mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False))
+
+    def _replica_offset(self):
+        """Index of this device along the flattened replica axes (inside a
+        shard_map body)."""
+        idx = 0
+        for ax in self.replica_axes:
+            idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
+        return idx
+
+    def _pmean(self, x):
+        return jax.lax.pmean(x, self.replica_axes)
+
+    def _leaf_mean(self, x):
+        """Global replica mean of one stacked leaf chunk, keepdims —
+        chunk means are equal-weight, so mean-of-chunk-means is exact."""
+        return self._pmean(jnp.mean(x.astype(jnp.float32), axis=0,
+                                    keepdims=True))
+
+    def _probe(self, W_chunk, means):
+        """S_k = (1/R) Σ_i ||w̄ − w_i||² from local partials + one psum."""
+        s_loc = sum(jnp.sum(jnp.square(x.astype(jnp.float32) - m))
+                    for x, m in zip(_leaves(W_chunk), _leaves(means)))
+        return jax.lax.psum(s_loc, self.replica_axes) / self.n_replicas
+
+    def _local_keys(self, key, r_local):
+        """Per-replica RNG keys derived from the *global* replica index, so
+        the stream is independent of how replicas map to devices."""
+        off = self._replica_offset() * r_local
+        return jax.vmap(lambda i: jax.random.fold_in(key, off + i))(
+            jnp.arange(r_local))
+
+    # ------------------------------------------------------------- programs
+    def replica_step(self, loss_fn, optimizer):
+        one_replica = avg.make_replica_step(loss_fn, optimizer)
+
+        def chunk(Wc, oc, bc, lr):
+            Wn, on, m = jax.vmap(one_replica, in_axes=(0, 0, 0, None))(
+                Wc, oc, bc, lr)
+            metrics = _tm(lambda x: self._pmean(jnp.mean(x, axis=0)), m)
+            return Wn, on, metrics
+
+        def prog(W, opt_state, batch, lr):
+            fn = self._cached("step", (W, opt_state, batch), lambda: self._shmap(
+                chunk,
+                (self._stacked(W), self._stacked(opt_state),
+                 self._stacked(batch), P()),
+                (self._stacked(W), self._stacked(opt_state), P())))
+            return fn(W, opt_state, batch, lr)
+
+        return prog
+
+    def full_step(self, loss_fn, optimizer):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def chunk(Wc, oc, bc, lr):
+            (loss, aux), grads = jax.vmap(grad_fn)(Wc, bc)
+            g_mean = _tm(self._leaf_mean, grads)
+            g_bcast = _tm(lambda g, w: jnp.broadcast_to(g, w.shape), g_mean, Wc)
+            Wn, on = jax.vmap(optimizer.update, in_axes=(0, 0, 0, None))(
+                g_bcast, oc, Wc, lr)
+            metrics = {"loss": self._pmean(jnp.mean(loss)),
+                       **{k: self._pmean(jnp.mean(v)) for k, v in aux.items()}}
+            return Wn, on, metrics
+
+        def prog(W, opt_state, batch, lr):
+            fn = self._cached("full", (W, opt_state, batch), lambda: self._shmap(
+                chunk,
+                (self._stacked(W), self._stacked(opt_state),
+                 self._stacked(batch), P()),
+                (self._stacked(W), self._stacked(opt_state), P())))
+            return fn(W, opt_state, batch, lr)
+
+        return prog
+
+    def qsgd_step(self, loss_fn, optimizer, bits):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def chunk(Wc, oc, bc, lr, key):
+            (loss, aux), grads = jax.vmap(grad_fn)(Wc, bc)
+            r_local = _leaves(Wc)[0].shape[0]
+            keys = self._local_keys(key, r_local)
+            q = jax.vmap(lambda g, k: qsgd_mod.quantize_pytree(g, k, bits))(
+                grads, keys)
+            g_mean = _tm(self._leaf_mean, q)
+            g_bcast = _tm(lambda g, w: jnp.broadcast_to(g, w.shape)
+                          .astype(w.dtype), g_mean, Wc)
+            Wn, on = jax.vmap(optimizer.update, in_axes=(0, 0, 0, None))(
+                g_bcast, oc, Wc, lr)
+            metrics = {"loss": self._pmean(jnp.mean(loss)),
+                       **{k: self._pmean(jnp.mean(v)) for k, v in aux.items()}}
+            return Wn, on, metrics
+
+        def prog(W, opt_state, batch, lr, key):
+            fn = self._cached("qsgd", (W, opt_state, batch), lambda: self._shmap(
+                chunk,
+                (self._stacked(W), self._stacked(opt_state),
+                 self._stacked(batch), P(), P()),
+                (self._stacked(W), self._stacked(opt_state), P())))
+            return fn(W, opt_state, batch, lr, key)
+
+        return prog
+
+    def all_mean(self, *, sync_momentum: bool = False):
+        def chunk(Wc, oc):
+            means = _tm(self._leaf_mean, Wc)
+            s_k = self._probe(Wc, means)
+            Wn = _tm(lambda x, m: jnp.broadcast_to(m, x.shape).astype(x.dtype),
+                     Wc, means)
+            if sync_momentum:
+                oc = _tm(lambda x: jnp.broadcast_to(
+                    self._leaf_mean(x), x.shape).astype(x.dtype), oc)
+            return Wn, oc, s_k
+
+        def prog(W, opt_state):
+            fn = self._cached(
+                f"all_mean{int(sync_momentum)}", (W, opt_state),
+                lambda: self._shmap(
+                    chunk, (self._stacked(W), self._stacked(opt_state)),
+                    (self._stacked(W), self._stacked(opt_state), P())))
+            return fn(W, opt_state)
+
+        return prog
+
+    def opt_mean(self):
+        def chunk(oc):
+            return _tm(lambda x: jnp.broadcast_to(
+                self._leaf_mean(x), x.shape).astype(x.dtype), oc)
+
+        def prog(opt_state):
+            if not _leaves(opt_state):
+                return opt_state
+            fn = self._cached("opt_mean", (opt_state,), lambda: self._shmap(
+                chunk, (self._stacked(opt_state),),
+                self._stacked(opt_state)))
+            return fn(opt_state)
+
+        return prog
+
+    def inner_mean(self, group_size: int):
+        g = int(group_size)
+
+        def build(W):
+            r_local = _leaves(W)[0].shape[0] // self.n_replica_devices
+            if r_local and r_local % g == 0:
+                # groups fall inside one device's chunk: pure local reshape
+                def chunk(Wc):
+                    return avg.group_sync(Wc, g)
+            elif r_local and g % r_local == 0:
+                groups = self._device_groups(g // r_local)
+                ax = self.replica_axes[-1]
+
+                def chunk(Wc):
+                    def leaf(x):
+                        m = jax.lax.pmean(
+                            jnp.mean(x.astype(jnp.float32), 0, keepdims=True),
+                            ax, axis_index_groups=groups)
+                        return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+                    return _tm(leaf, Wc)
+            else:
+                raise NotImplementedError(
+                    f"group_size={g} does not align with {r_local} local "
+                    f"replicas per device")
+            return self._shmap(chunk, (self._stacked(W),), self._stacked(W))
+
+        def prog(W):
+            return self._cached(f"inner{g}", (W,), lambda: build(W))(W)
+
+        return prog
+
+    def _device_groups(self, devices_per_group: int):
+        """Contiguous device groups along the innermost replica axis.
+        Groups crossing the pod boundary are not supported — the point of
+        the hierarchy is that they never should."""
+        sizes = dict(self.mesh.shape)
+        inner = sizes[self.replica_axes[-1]]
+        if devices_per_group > inner or inner % devices_per_group:
+            raise NotImplementedError(
+                f"replica groups spanning {devices_per_group} devices do "
+                f"not tile the '{self.replica_axes[-1]}' axis (size {inner})")
+        return [list(range(i, i + devices_per_group))
+                for i in range(0, inner, devices_per_group)]
+
+    def quantized_all_mean(self, bits: int):
+        def chunk(Wc, anchor, key):
+            r_local = _leaves(Wc)[0].shape[0]
+            delta = _tm(lambda w, a: w.astype(jnp.float32) - a[None],
+                        Wc, anchor)
+            keys = self._local_keys(key, r_local)
+            dq = jax.vmap(lambda d, k: qsgd_mod.quantize_pytree(d, k, bits))(
+                delta, keys)
+            mean_d = _tm(lambda d: self._pmean(jnp.mean(d, axis=0)), dq)
+            s_loc = sum(jnp.sum(jnp.square(d - m[None]))
+                        for d, m in zip(_leaves(dq), _leaves(mean_d)))
+            s_k = jax.lax.psum(s_loc, self.replica_axes) / self.n_replicas
+            new_anchor = _tm(lambda a, m: a + m, anchor, mean_d)
+            Wn = _tm(lambda w, a: jnp.broadcast_to(a[None], w.shape)
+                     .astype(w.dtype), Wc, new_anchor)
+            return Wn, new_anchor, s_k
+
+        def prog(W, anchor, key):
+            fn = self._cached("qam", (W, anchor), lambda: self._shmap(
+                chunk,
+                (self._stacked(W), self._replicated(anchor), P()),
+                (self._stacked(W), self._replicated(anchor), P())))
+            return fn(W, anchor, key)
+
+        return prog
+
+    def mean_delta(self):
+        def chunk(Wc):
+            means = _tm(self._leaf_mean, Wc)
+            s_k = self._probe(Wc, means)
+            delta = _tm(lambda x, m: m - x.astype(jnp.float32), Wc, means)
+            return delta, s_k
+
+        def prog(W):
+            fn = self._cached("mean_delta", (W,), lambda: self._shmap(
+                chunk, (self._stacked(W),), (self._stacked(W), P())))
+            return fn(W)
+
+        return prog
+
+    def collapse(self, W: Pytree) -> Pytree:
+        # eager global mean works on sharded arrays; result is unsharded
+        return avg.replica_mean(W)

@@ -1,0 +1,98 @@
+"""Host-device backend: all replicas on one device, programs via ``vmap``.
+
+This is the PR-1 execution model, bit-exact: the replica axis is an ordinary
+array dimension on the default device, the local step vmaps over it, and the
+"collectives" are ``jnp.mean(axis=0)`` reductions.  It is the right backend
+for single-accelerator runs and for CI, and the reference the mesh backend
+is tested against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.backends.base import ExecutionBackend, register_backend
+from repro.core import averaging as avg
+from repro.core import qsgd as qsgd_mod
+
+
+@register_backend
+class VmapBackend(ExecutionBackend):
+    """All replicas on the default device; ``vmap`` + ``jnp.mean``."""
+
+    name = "vmap"
+
+    # placement is the identity: the engine's stacked pytree already lives
+    # where the programs run (put_* inherited as no-ops)
+
+    def init_opt_state(self, optimizer, W):
+        return jax.vmap(optimizer.init)(W)
+
+    def describe(self):
+        d = super().describe()
+        d["use_kernel"] = self.use_kernel
+        return d
+
+    # ------------------------------------------------------------- programs
+    def replica_step(self, loss_fn, optimizer):
+        return jax.jit(avg.make_local_step(loss_fn, optimizer))
+
+    def full_step(self, loss_fn, optimizer):
+        return jax.jit(avg.make_full_step(loss_fn, optimizer))
+
+    def qsgd_step(self, loss_fn, optimizer, bits):
+        return jax.jit(qsgd_mod.make_qsgd_step(loss_fn, optimizer, bits))
+
+    def all_mean(self, *, sync_momentum: bool = False):
+        use_kernel = self.use_kernel
+        return jax.jit(lambda W, o: avg.sync_replicas(
+            W, o, sync_momentum=sync_momentum, use_kernel=use_kernel))
+
+    def inner_mean(self, group_size: int):
+        return jax.jit(lambda W: avg.group_sync(W, group_size))
+
+    def opt_mean(self):
+        return jax.jit(avg.sync_opt_state)
+
+    def quantized_all_mean(self, bits: int):
+        """QSGD-quantized parameter deltas from a shared full-precision
+        anchor; every replica adopts anchor + mean(dequantized deltas)."""
+
+        @jax.jit
+        def qsync(W, anchor, key):
+            R = jax.tree_util.tree_leaves(W)[0].shape[0]
+            delta = jax.tree_util.tree_map(
+                lambda w, a: w.astype(jnp.float32) - a[None], W, anchor)
+            keys = jax.random.split(key, R)
+            dq = jax.vmap(
+                lambda d, k: qsgd_mod.quantize_pytree(d, k, bits))(delta, keys)
+            mean_d = jax.tree_util.tree_map(
+                lambda d: jnp.mean(d, axis=0), dq)
+            s_k = sum(
+                jnp.sum(jnp.square(d - m[None])) / d.shape[0]
+                for d, m in zip(jax.tree_util.tree_leaves(dq),
+                                jax.tree_util.tree_leaves(mean_d)))
+            new_anchor = jax.tree_util.tree_map(
+                lambda a, m: a + m, anchor, mean_d)
+            W_new = jax.tree_util.tree_map(
+                lambda w, a: jnp.broadcast_to(a[None], w.shape).astype(w.dtype),
+                W, new_anchor)
+            return W_new, new_anchor, s_k
+
+        return qsync
+
+    def mean_delta(self):
+        @jax.jit
+        def delta(W):
+            means = jax.tree_util.tree_map(
+                lambda x: jnp.mean(x.astype(jnp.float32), axis=0,
+                                   keepdims=True), W)
+            s_k = sum(
+                jnp.sum(jnp.square(x.astype(jnp.float32) - m)) / x.shape[0]
+                for x, m in zip(jax.tree_util.tree_leaves(W),
+                                jax.tree_util.tree_leaves(means)))
+            d = jax.tree_util.tree_map(
+                lambda x, m: m - x.astype(jnp.float32), W, means)
+            return d, s_k
+
+        return delta

@@ -2,7 +2,15 @@
 
 The controller's adaptive state (p, C2, cnt) is part of the training state —
 restoring a run must resume the same period schedule (Algorithm 2 is
-stateful across syncs)."""
+stateful across syncs).
+
+Checkpoints are backend-neutral: arrays are ``jax.device_get`` to host
+numpy before writing (gathering sharded arrays off a mesh), and the engine
+re-``put``s them through whatever ``ExecutionBackend`` the restoring run
+uses — a vmap-saved checkpoint resumes on a mesh and vice versa.  Strategy
+state may carry device pytrees (the qsgd_periodic anchor, DaSGD's pending
+correction) under the ``_arrays`` key; those go to ``strategy_arrays.npz``
+next to the json meta."""
 from __future__ import annotations
 
 import json
@@ -53,10 +61,19 @@ def save_checkpoint(path: str, params: Pytree, *,
                     step: int = 0,
                     controller_state: Optional[Dict] = None) -> None:
     os.makedirs(path, exist_ok=True)
-    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    np.savez(os.path.join(path, "params.npz"),
+             **_flatten(jax.device_get(params)))
     if opt_state is not None:
-        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
-    meta = {"step": step, "controller": controller_state or {}}
+        np.savez(os.path.join(path, "opt_state.npz"),
+                 **_flatten(jax.device_get(opt_state)))
+    state = dict(controller_state or {})
+    arrays = state.pop("_arrays", None)
+    arr_path = os.path.join(path, "strategy_arrays.npz")
+    if arrays:
+        np.savez(arr_path, **_flatten(jax.device_get(arrays)))
+    elif os.path.exists(arr_path):
+        os.remove(arr_path)            # don't resurrect a stale anchor
+    meta = {"step": step, "controller": state}
     with open(os.path.join(path, "meta.json"), "w") as f:
         json.dump(meta, f)
 
@@ -71,6 +88,11 @@ def load_checkpoint(path: str) -> Tuple[Pytree, Optional[Pytree], Dict]:
             opt_state = _unflatten({k: z[k] for k in z.files})
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
+    arr_path = os.path.join(path, "strategy_arrays.npz")
+    if os.path.exists(arr_path):
+        with np.load(arr_path) as z:
+            meta.setdefault("controller", {})["_arrays"] = _unflatten(
+                {k: z[k] for k in z.files})
     return params, opt_state, meta
 
 

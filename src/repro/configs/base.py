@@ -225,7 +225,7 @@ class AveragingConfig:
     """Paper technique hyper-parameters (Algorithm 2 + baselines)."""
 
     # any name registered in repro/strategies: adpsgd | cpsgd | fullsgd |
-    # qsgd | decreasing | hier_adpsgd | qsgd_periodic | ...
+    # qsgd | decreasing | hier_adpsgd | qsgd_periodic | adacomm | dasgd | ...
     method: str = "adpsgd"
     p_init: int = 4               # initial averaging period
     p_const: int = 8              # CPSGD constant period
@@ -244,6 +244,12 @@ class AveragingConfig:
     # (0 -> half the replicas form one group)
     inner_period: int = 1
     group_size: int = 0
+    # AdaComm (Wang & Joshi, arXiv:1810.08313): refresh the period every
+    # `adacomm_interval` steps as tau = ceil(p_init * sqrt(F_t / F_0))
+    adacomm_interval: int = 20
+    # DaSGD (arXiv:2006.00441): the averaged correction from a sync at step
+    # k is applied at step k + dasgd_delay (overlap window)
+    dasgd_delay: int = 2
 
 
 @dataclass(frozen=True)

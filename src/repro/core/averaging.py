@@ -56,13 +56,11 @@ def parameter_variance(W: Pytree) -> jnp.ndarray:
         jax.tree_util.tree_map(leaf_var, W)))
 
 
-def make_local_step(loss_fn: LossFn, optimizer: Optimizer):
-    """Returns step(W, opt_state, batch, lr) -> (W, opt_state, metrics).
-
-    ``batch`` leaves carry the replica axis (R, per_replica_batch, ...).
-    vmap over the replica axis keeps trajectories independent; on the mesh
-    this axis is sharded so vmap lanes live on distinct replica groups.
-    """
+def make_replica_step(loss_fn: LossFn, optimizer: Optimizer):
+    """Returns the *single-replica* program one_replica(params, opt_state,
+    batch, lr) -> (params, opt_state, metrics) — the unit every execution
+    backend maps over its replica layout (``vmap`` on one device,
+    ``shard_map``+``vmap`` chunks on a mesh)."""
     grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
     def one_replica(params, opt_state, batch, lr):
@@ -71,6 +69,18 @@ def make_local_step(loss_fn: LossFn, optimizer: Optimizer):
         gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                              for g in jax.tree_util.tree_leaves(grads)))
         return new_params, new_state, {"loss": loss, "grad_norm": gnorm, **aux}
+
+    return one_replica
+
+
+def make_local_step(loss_fn: LossFn, optimizer: Optimizer):
+    """Returns step(W, opt_state, batch, lr) -> (W, opt_state, metrics).
+
+    ``batch`` leaves carry the replica axis (R, per_replica_batch, ...).
+    vmap over the replica axis keeps trajectories independent; on the mesh
+    this axis is sharded so vmap lanes live on distinct replica groups.
+    """
+    one_replica = make_replica_step(loss_fn, optimizer)
 
     def step(W, opt_state, batch, lr):
         new_W, new_state, metrics = jax.vmap(

@@ -9,6 +9,7 @@ decision is off the critical path (DESIGN.md §2).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -156,6 +157,52 @@ class ADPSGDController(PeriodController):
             self.p = min(self.p + 1, self.cfg.p_max)
         elif s_k > self.cfg.upper * target:
             self.p = max(self.p - 1, self.cfg.p_min)
+
+
+class AdaCommController(PeriodController):
+    """Wang & Joshi's AdaComm (arXiv:1810.08313, Alg. 2): the best
+    error-runtime trade-off starts with infrequent communication and tightens
+    it as the loss falls.  Training is cut into blocks of
+    ``adacomm_interval`` iterations; at each block boundary the period is
+    reset to
+
+        tau_j = ceil( tau_0 * sqrt( F(w_j) / F(w_0) ) )
+
+    where F is the running training loss of the block just finished and
+    F(w_0) the first block's (the calibration block keeps tau_0 = p_init).
+    The loss feedback arrives through ``observe_loss`` — per-step losses the
+    engine already reads back for its history, so the schedule costs no
+    extra device round-trips."""
+
+    name = "adacomm"
+    _STATE_ATTRS = ("cnt", "tau", "f0", "_loss_sum", "_loss_n")
+
+    def __init__(self, cfg: AveragingConfig, total_steps: int):
+        super().__init__(cfg, total_steps)
+        self.tau0 = max(1, cfg.p_init)
+        self.tau = self.tau0
+        self.interval = max(1, cfg.adacomm_interval)
+        self.f0: Optional[float] = None
+        self._loss_sum = 0.0
+        self._loss_n = 0
+
+    @property
+    def period(self) -> int:
+        return self.tau
+
+    def observe_loss(self, k: int, loss: float) -> None:
+        self._loss_sum += float(loss)
+        self._loss_n += 1
+        if (k + 1) % self.interval == 0 and self._loss_n:
+            f = self._loss_sum / self._loss_n
+            if self.f0 is None:
+                self.f0 = f                     # calibration block
+            else:
+                self.tau = int(min(max(
+                    math.ceil(self.tau0 * math.sqrt(max(f, 0.0) / self.f0)),
+                    self.cfg.p_min), self.cfg.p_max))
+            self._loss_sum = 0.0
+            self._loss_n = 0
 
 
 class HierarchicalADPSGDController(ADPSGDController):

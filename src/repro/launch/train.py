@@ -1,13 +1,15 @@
 """End-to-end training driver.
 
     PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --method adpsgd \
-        --steps 200 --replicas 4 --reduced
+        --steps 200 --replicas 4 --reduced --backend vmap
 
 ``--method`` accepts any name registered in ``repro/strategies`` (the five
-paper methods plus hier_adpsgd, qsgd_periodic, and anything a plugin
-registers).  On this container it runs reduced configs on the host device;
-on a real cluster the same driver jits against ``make_production_mesh()``
-with the shardings from launch/sharding.py (``--mesh prod``).
+paper methods plus hier_adpsgd, qsgd_periodic, adacomm, dasgd, and anything
+a plugin registers); ``--backend`` any name in ``repro/backends`` (vmap =
+host device; mesh = replica axis sharded over the devices jax sees —
+on this container set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+to give the mesh N host devices, on a real cluster the same driver takes
+the production mesh from launch/mesh.py).
 """
 from __future__ import annotations
 
@@ -19,13 +21,14 @@ import time
 import jax
 import numpy as np
 
+from repro.backends import available_backends, make_backend
 from repro.checkpoint.io import save_checkpoint, strategy_state
 from repro.configs import AveragingConfig, get_config, reduced
 from repro.data.pipeline import SyntheticTokens
 from repro.launch.steps import make_loss_fn
 from repro.models import model as M
 from repro.optim import get_optimizer, make_lr_schedule
-from repro.runtime.engine import TrainerEngine
+from repro.runtime.engine import Checkpointer, PeriodicEval, TrainerEngine
 from repro.strategies import available_strategies, make_strategy
 
 
@@ -34,6 +37,14 @@ def main():
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--method", default="adpsgd",
                     choices=available_strategies())
+    ap.add_argument("--backend", default="vmap",
+                    choices=available_backends(),
+                    help="execution backend: where replicas live and how "
+                         "syncs lower (repro/backends)")
+    ap.add_argument("--sync-kernel", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused Pallas mean+sqdev kernel in the sync "
+                         "(auto = on TPU only, where it is profitable)")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4, help="per-replica batch")
@@ -45,8 +56,21 @@ def main():
     ap.add_argument("--inner-period", type=int, default=1)
     ap.add_argument("--lr", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt", default=None,
+                    help="write a final checkpoint (replica-averaged) here")
     ap.add_argument("--out", default=None)
+    # callback-bus flags: periodic eval + periodic (resumable) checkpoints
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="evaluate the replica-averaged model every N steps")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every N steps (needs --ckpt-path)")
+    ap.add_argument("--ckpt-path", default=None,
+                    help="directory for --ckpt-every checkpoints")
+    ap.add_argument("--keep-replicas", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="periodic checkpoints keep the stacked replica "
+                         "axis (resumable); --no-keep-replicas writes "
+                         "replica-averaged export checkpoints")
     args = ap.parse_args()
 
     run = get_config(args.arch)
@@ -69,17 +93,32 @@ def main():
     params0 = M.init_params(jax.random.PRNGKey(args.seed), cfg)
     loss_fn = make_loss_fn(cfg)
     strategy = make_strategy(avg_cfg, args.steps)
+    use_kernel = {"auto": None, "on": True, "off": False}[args.sync_kernel]
+    backend = make_backend(args.backend, use_kernel=use_kernel)
+
+    callbacks = []
+    if args.eval_every:
+        callbacks.append(PeriodicEval(
+            loss_fn, lambda: data.eval_batches(batch=args.batch * 4),
+            every=args.eval_every))
+    if args.ckpt_every:
+        if not args.ckpt_path:
+            ap.error("--ckpt-every needs --ckpt-path")
+        callbacks.append(Checkpointer(args.ckpt_path, every=args.ckpt_every,
+                                      keep_replicas=args.keep_replicas))
 
     engine = TrainerEngine(
         loss_fn=loss_fn, optimizer=opt, params0=params0,
         n_replicas=args.replicas, data_fn=data_fn, lr_fn=lr_fn,
         avg_cfg=avg_cfg, total_steps=args.steps, strategy=strategy,
+        backend=backend, callbacks=callbacks,
         track_variance_every=max(1, args.steps // 50), seed=args.seed)
     t0 = time.time()
     hist = engine.run()
     dt = time.time() - t0
 
-    print(f"[{args.arch} / {args.method}] {args.steps} steps in {dt:.1f}s")
+    print(f"[{args.arch} / {args.method} / {args.backend}] "
+          f"{args.steps} steps in {dt:.1f}s  ({backend.describe()})")
     print(f"  loss {hist.losses[0]:.4f} -> "
           f"{np.mean(hist.losses[-10:]):.4f}")
     print(f"  syncs={hist.n_syncs} mean_period="
@@ -87,6 +126,9 @@ def main():
           f"final_p={hist.period_history[-1] if hist.period_history else 1}")
     if hist.inner_sync_steps:
         print(f"  inner_syncs={len(hist.inner_sync_steps)}")
+    if hist.evals:
+        print(f"  evals={len(hist.evals)} last@step{hist.eval_steps[-1]}: "
+              + " ".join(f"{k}={v:.4f}" for k, v in hist.evals[-1].items()))
     print(f"  weighted-avg Var[W_k] (paper Eq.9) = "
           f"{hist.weighted_avg_variance():.3e}")
     if args.ckpt:
@@ -99,6 +141,8 @@ def main():
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump({"arch": args.arch, "method": args.method,
+                       "backend": args.backend,
+                       "evals": hist.evals, "eval_steps": hist.eval_steps,
                        "losses": hist.losses, "s_k": hist.s_k,
                        "sync_steps": hist.sync_steps,
                        "periods": hist.period_history,

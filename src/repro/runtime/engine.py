@@ -3,9 +3,12 @@
 ``TrainerEngine`` owns the training state (replica-stacked parameters W,
 optimizer state, history) and the iteration loop; *everything*
 method-specific lives in the ``CommunicationStrategy`` it is given (see
-``repro/strategies/base.py``).  Per iteration the engine asks the strategy
-which pre-compiled programs to dispatch (``strategy.actions(k)``), runs
-them, and routes their outputs:
+``repro/strategies/base.py``), and everything device-specific in the
+``ExecutionBackend`` the strategy compiles against
+(``repro/backends/base.py`` — vmap on one host device, or shard_map over a
+real mesh).  Per iteration the engine asks the strategy which pre-compiled
+programs to dispatch (``strategy.actions(k)``), runs them, and routes their
+outputs:
 
 * ``info["loss"]``       -> training-loss sample
 * ``info["s_k"]``        -> a sync happened: feed ``strategy.observe`` and
@@ -29,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends import ExecutionBackend, resolve_backend
 from repro.configs.base import AveragingConfig
 from repro.core import averaging as avg
 from repro.strategies import CommunicationStrategy, make_strategy
@@ -169,6 +173,7 @@ class TrainerEngine:
                  total_steps: int,
                  avg_cfg: Optional[AveragingConfig] = None,
                  strategy: Optional[CommunicationStrategy] = None,
+                 backend: Optional[ExecutionBackend] = None,
                  callbacks: Sequence[Callback] = (),
                  track_variance_every: int = 0,
                  seed: int = 0):
@@ -182,8 +187,10 @@ class TrainerEngine:
             raise ValueError(
                 "avg_cfg conflicts with the explicit strategy's config; "
                 "pass one or the other (or matching configs)")
+        self.backend = resolve_backend(backend)   # name, instance, or None
+        self.backend.bind(n_replicas)
         self.strategy = strategy
-        self.strategy.compile(loss_fn, optimizer)
+        self.strategy.compile(loss_fn, optimizer, backend=self.backend)
         self._optimizer = optimizer
         self._n_replicas = n_replicas
         self.loss_fn = loss_fn
@@ -199,18 +206,22 @@ class TrainerEngine:
         self.W: Optional[Pytree] = None
         self.opt_state: Optional[Pytree] = None
         if params0 is not None:
-            self.W = avg.stack_replicas(params0, n_replicas)
-            self.opt_state = jax.vmap(optimizer.init)(self.W)
+            self.W = self.backend.put_params(
+                avg.stack_replicas(params0, n_replicas))
+            self.opt_state = self.backend.init_opt_state(optimizer, self.W)
 
     # ------------------------------------------------------------------
     def load_state(self, W: Pytree, opt_state: Optional[Pytree] = None,
                    strategy_state: Optional[Dict] = None) -> None:
         """Install checkpointed state (replica-stacked W) for resume.
         Export checkpoints (``Checkpointer(keep_replicas=False)``) lack the
-        replica axis and are rejected.  ``opt_state=None`` keeps the
-        engine's freshly-initialized optimizer state — the schedule still
-        resumes exactly, but stateful optimizers (momentum/adamw) restart
-        from zero, so the loss trajectory is not bit-identical."""
+        replica axis and are rejected.  State is re-``put`` through the
+        active backend, so a checkpoint saved under one backend (vmap)
+        resumes under another (mesh) and vice versa — ``checkpoint/io.py``
+        always saves host arrays.  ``opt_state=None`` keeps the engine's
+        freshly-initialized optimizer state — the schedule still resumes
+        exactly, but stateful optimizers (momentum/adamw) restart from
+        zero, so the loss trajectory is not bit-identical."""
         got = [tuple(np.shape(x)) for x in jax.tree_util.tree_leaves(W)]
         if self.W is not None:
             want = [x.shape for x in jax.tree_util.tree_leaves(self.W)]
@@ -223,13 +234,14 @@ class TrainerEngine:
                 "checkpoint does not match the engine's replica-stacked "
                 "state (was it saved with keep_replicas=False? such "
                 f"checkpoints are export-only): {got[:1]} vs {want[:1]}")
-        self.W = W
+        self.W = self.backend.put_params(W)
         if opt_state is not None:
-            self.opt_state = opt_state
+            self.opt_state = self.backend.put_opt(opt_state, self.W)
         elif self.opt_state is None:
             # checkpoint without opt_state on a params0-less engine: give
             # the run a fresh optimizer state (see docstring caveat)
-            self.opt_state = jax.vmap(self._optimizer.init)(self.W)
+            self.opt_state = self.backend.init_opt_state(
+                self._optimizer, self.W)
         if strategy_state is not None:
             from repro.checkpoint.io import restore_strategy
             restore_strategy(self.strategy, strategy_state)
@@ -263,7 +275,9 @@ class TrainerEngine:
                     action, self.W, self.opt_state, batch, lr, key)
                 if "loss" in info:
                     step_info = info
-                    hist.losses.append(float(info["loss"]))
+                    loss_val = float(info["loss"])
+                    hist.losses.append(loss_val)
+                    self.strategy.observe_loss(k, loss_val)
                     for cb in self.callbacks:
                         cb.on_step_end(self, k, info)
                 if "s_k" in info:

@@ -1,7 +1,8 @@
 """Pluggable communication strategies (see base.py for the API).
 
 Importing this package registers every built-in strategy:
-fullsgd / cpsgd / adpsgd / decreasing / qsgd / hier_adpsgd / qsgd_periodic.
+fullsgd / cpsgd / adpsgd / decreasing / qsgd / hier_adpsgd / qsgd_periodic /
+adacomm / dasgd.
 """
 from repro.strategies.base import (  # noqa: F401
     CommunicationStrategy, available_strategies, comm_stats_for,
@@ -17,3 +18,5 @@ from repro.strategies.quantized import (  # noqa: F401
 from repro.strategies.hierarchical import (  # noqa: F401
     HierarchicalADPSGDStrategy,
 )
+from repro.strategies.adacomm import AdaCommStrategy  # noqa: F401
+from repro.strategies.dasgd import DaSGDStrategy  # noqa: F401

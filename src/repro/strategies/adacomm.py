@@ -1,0 +1,30 @@
+"""AdaComm: loss-adaptive communication period (Wang & Joshi, 1810.08313).
+
+Where the source paper's ADPSGD pins the inter-sync parameter variance to
+the learning rate (probe-driven), AdaComm drives the period from the
+*training loss*: communicate rarely while the loss is high (local SGD makes
+fast early progress without paying the all-reduce) and more often as it
+falls (averaging tightens the error floor near convergence).  The schedule
+is ``tau_j = ceil(tau_0 * sqrt(F_j / F_0))`` recomputed every
+``cfg.adacomm_interval`` iterations — see ``AdaCommController``.
+
+The strategy itself is the plain periodic machinery; only the controller
+(and the ``observe_loss`` feedback route) differ, which is exactly the
+separation the strategy/backend split is for.
+"""
+from __future__ import annotations
+
+from repro.core.controller import AdaCommController
+from repro.strategies.base import register_strategy
+from repro.strategies.periodic import PeriodicAveragingStrategy
+
+
+@register_strategy
+class AdaCommStrategy(PeriodicAveragingStrategy):
+    """Periodic averaging on AdaComm's error-runtime-adaptive schedule."""
+
+    name = "adacomm"
+    controller_cls = AdaCommController
+
+    def observe_loss(self, k: int, loss: float) -> None:
+        self.controller.observe_loss(k, loss)

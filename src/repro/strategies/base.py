@@ -4,10 +4,16 @@ The paper's thesis is that the communication *policy* — when and what the
 replicas synchronize — is the variable worth optimizing.  A
 ``CommunicationStrategy`` therefore owns everything policy-specific:
 
-* ``compile(loss_fn, optimizer)`` — build the strategy's jitted device
-  programs (local step, sync, quantized sync, ...).  Programs all share one
-  signature ``(W, opt_state, batch, lr, key) -> (W, opt_state, info)`` so
-  the engine can dispatch them without knowing what they are.
+* ``compile(loss_fn, optimizer, backend)`` — build the strategy's device
+  programs (local step, sync, quantized sync, ...) from the
+  ``ExecutionBackend``'s primitives (``backend.replica_step``,
+  ``backend.all_mean``, ``backend.quantized_all_mean``,
+  ``backend.inner_mean`` — ``repro/backends/base.py``): the backend owns
+  device placement and collectives, the strategy owns policy, so the same
+  strategy compiles against one host device (vmap) or a sharded mesh.
+  Programs all share one signature
+  ``(W, opt_state, batch, lr, key) -> (W, opt_state, info)`` so the engine
+  can dispatch them without knowing what they are.
 * ``actions(k)`` — the host-side per-iteration decision: which program
   names to dispatch at iteration k, in order.  This absorbs the old
   ``PeriodController`` hierarchy; decisions are plain python and stay off
@@ -51,13 +57,17 @@ class CommunicationStrategy:
         self.cfg = cfg
         self.total_steps = total_steps
         self.programs: Dict[str, Program] = {}
+        self.backend = None            # set by compile()
         self._comm_events = 0
 
     # ------------------------------------------------------------- programs
-    def compile(self, loss_fn, optimizer,
+    def compile(self, loss_fn, optimizer, backend=None,
                 avg_cfg: Optional[AveragingConfig] = None) -> None:
-        """Build ``self.programs``.  Subclasses implement
-        ``_build_programs``.  ``avg_cfg``, if given, must equal the
+        """Build ``self.programs`` against ``backend`` (an
+        ``ExecutionBackend`` instance, a registered backend name, or None
+        for the default vmap backend).  Subclasses implement
+        ``_build_programs(loss_fn, optimizer, backend)`` in terms of the
+        backend's primitives.  ``avg_cfg``, if given, must equal the
         constructor config — the schedule state was built from that config
         in ``__init__``, so a different one here would silently desync
         programs from schedule."""
@@ -65,9 +75,11 @@ class CommunicationStrategy:
             raise ValueError(
                 f"strategy '{self.name}' was constructed with a different "
                 "AveragingConfig; rebuild it via make_strategy(avg_cfg, ...)")
-        self.programs = self._build_programs(loss_fn, optimizer)
+        from repro.backends import resolve_backend
+        self.backend = resolve_backend(backend)
+        self.programs = self._build_programs(loss_fn, optimizer, self.backend)
 
-    def _build_programs(self, loss_fn, optimizer) -> Dict[str, Program]:
+    def _build_programs(self, loss_fn, optimizer, backend) -> Dict[str, Program]:
         raise NotImplementedError
 
     def dispatch(self, action: str, W, opt_state, batch, lr, key):
@@ -80,6 +92,11 @@ class CommunicationStrategy:
 
     def observe(self, k: int, lr: float, s_k: float) -> None:
         """Feedback after the sync program ran at iteration k."""
+
+    def observe_loss(self, k: int, loss: float) -> None:
+        """Per-step training loss feedback (the engine already reads the
+        loss back for its history, so this costs nothing extra).  Drives
+        loss-adaptive policies — AdaComm's error-runtime schedule."""
 
     # ------------------------------------------------------------- telemetry
     @property

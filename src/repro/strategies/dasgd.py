@@ -1,0 +1,116 @@
+"""DaSGD: delayed averaging overlaps the sync with compute (2006.00441).
+
+Synchronous periodic averaging stalls every replica while the all-reduce is
+in flight.  DaSGD hides that latency: the average computed from the
+parameters at step k is *applied* at step k + d (``cfg.dasgd_delay``), and
+replicas keep taking local steps in between.  Each replica then holds
+
+    w_i(k+d)  +  ( w̄(k) − w_i(k) )
+
+— the agreed average plus its own local updates from the overlap window, so
+the correction never discards local progress (the paper's gradient-delay
+compensation, expressed on parameters).
+
+Two device programs implement the pair:
+
+* ``sync`` (snapshot)  — ``backend.mean_delta()``: the only collective;
+  produces the per-replica correction ``w̄ − w_i`` and the variance probe
+  S_k, both recorded at the *snapshot* step.
+* ``sync_apply``       — ``backend.apply_delta()``: a collective-free
+  elementwise add ``d`` steps later.
+
+The in-flight correction is training state: it rides the checkpoint under
+``_arrays`` together with its due step, so a resumed run applies it at the
+same iteration the uninterrupted run would have.  Warmup iterations
+(``warmup_full_sync_steps``) use the immediate full sync — the paper
+overlaps steady-state rounds, not the period-1 warmup.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+from repro.configs.base import AveragingConfig
+from repro.core.controller import ConstantPeriodController
+from repro.strategies.base import STEP, SYNC, register_strategy
+from repro.strategies.periodic import PeriodicAveragingStrategy
+
+SYNC_APPLY = "sync_apply"
+FULL_SYNC = "full_sync"
+
+
+@register_strategy
+class DaSGDStrategy(PeriodicAveragingStrategy):
+    """Constant-period averaging applied ``dasgd_delay`` steps late."""
+
+    name = "dasgd"
+    controller_cls = ConstantPeriodController
+
+    def __init__(self, cfg: AveragingConfig, total_steps: int, **kw):
+        super().__init__(cfg, total_steps, **kw)
+        # keep the overlap window shorter than the averaging period so a
+        # new snapshot never lands while one is still in flight
+        self.delay = max(1, min(int(cfg.dasgd_delay), max(1, cfg.p_const - 1)))
+        self._pending = None          # device pytree: stacked corrections
+        self._apply_at = None         # absolute step the correction is due
+
+    def _build_programs(self, loss_fn, optimizer, backend):
+        programs = super()._build_programs(loss_fn, optimizer, backend)
+        programs[FULL_SYNC] = programs[SYNC]   # warmup path: immediate sync
+        delta_fn = backend.mean_delta()
+        apply_fn = backend.apply_delta()
+
+        def snapshot_prog(W, opt_state, batch, lr, key):
+            self._pending, s_k = delta_fn(W)
+            return W, opt_state, {"s_k": s_k}
+
+        def apply_prog(W, opt_state, batch, lr, key):
+            W = apply_fn(W, self._pending)
+            self._pending = None
+            return W, opt_state, {"delayed_apply": True}
+
+        programs[SYNC] = snapshot_prog
+        programs[SYNC_APPLY] = apply_prog
+        return programs
+
+    def actions(self, k: int):
+        acts = [STEP]
+        if self._apply_at is not None and k >= self._apply_at:
+            acts.append(SYNC_APPLY)
+            self._apply_at = None
+        if self.controller.sync_now(k):
+            if k < self.cfg.warmup_full_sync_steps:
+                self._comm_events += 1
+                acts.append(FULL_SYNC)
+            elif self._apply_at is None:
+                self._comm_events += 1
+                acts.append(SYNC)
+                self._apply_at = k + self.delay
+        return tuple(acts)
+
+    # ------------------------------------------------------------ checkpoint
+    def state_dict(self) -> Dict[str, Any]:
+        d = super().state_dict()
+        d["apply_at"] = self._apply_at
+        if self._pending is not None:
+            d.setdefault("_arrays", {})["pending_delta"] = \
+                jax.device_get(self._pending)
+        return d
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        super().load_state_dict(state)
+        self._apply_at = state.get("apply_at")
+        if self._apply_at is not None:
+            self._apply_at = int(self._apply_at)
+        arrays = state.get("_arrays") or {}
+        if "pending_delta" in arrays:
+            pending = arrays["pending_delta"]
+            if self.backend is not None:
+                pending = self.backend.put_params(pending)
+            self._pending = pending
+        else:
+            # no correction in flight (or a legacy checkpoint without one):
+            # drop any stale due-step so apply never sees a missing delta
+            self._pending = None
+            self._apply_at = None

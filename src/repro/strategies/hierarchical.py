@@ -5,7 +5,10 @@ constant period; the outer (cross-pod, slow link) sync is the paper's
 adaptive one.  This wires the previously-dead
 ``HierarchicalADPSGDController.inner_sync_now`` path end-to-end: the inner
 counter is consulted every iteration, and an outer sync subsumes the inner
-one (the global average already equalizes every group).
+one (the global average already equalizes every group).  The inner average
+is ``backend.inner_mean(group_size)``: a device-local reshape on the vmap
+backend, an in-group ``pmean`` (fast ICI, never the cross-pod link) on the
+mesh backend.
 
 Comm accounting deliberately inherits the base hooks: the analytic model
 (core/comm_model.py) prices the *slow cross-pod link*, which only outer
@@ -19,7 +22,6 @@ from typing import Any, Dict
 
 import jax
 
-from repro.core import averaging as avg
 from repro.core.controller import HierarchicalADPSGDController
 from repro.strategies.base import INNER_SYNC, STEP, SYNC, register_strategy
 from repro.strategies.periodic import PeriodicAveragingStrategy
@@ -39,19 +41,19 @@ class HierarchicalADPSGDStrategy(PeriodicAveragingStrategy):
                             f"got {type(controller).__name__}")
         self.controller = controller
 
-    def _build_programs(self, loss_fn, optimizer):
-        programs = super()._build_programs(loss_fn, optimizer)
+    def _build_programs(self, loss_fn, optimizer, backend):
+        programs = super()._build_programs(loss_fn, optimizer, backend)
         group_cfg = self.cfg.group_size
-        jitted: Dict[int, Any] = {}
+        built: Dict[int, Any] = {}
 
         def inner_prog(W, opt_state, batch, lr, key):
             R = jax.tree_util.tree_leaves(W)[0].shape[0]
             g = group_cfg or max(1, R // 2)
             while R % g:
                 g -= 1
-            if g not in jitted:
-                jitted[g] = jax.jit(lambda w: avg.group_sync(w, g))
-            return jitted[g](W), opt_state, {"inner_sync": True}
+            if g not in built:
+                built[g] = backend.inner_mean(g)
+            return built[g](W), opt_state, {"inner_sync": True}
 
         programs[INNER_SYNC] = inner_prog
         return programs

@@ -1,19 +1,19 @@
 """The paper's periodic-averaging strategies plus the FULLSGD baseline.
 
-``PeriodicAveragingStrategy`` is the shared machinery: a vmapped local step
-every iteration, and the replica-averaging sync program on the schedule its
-``PeriodController`` picks (constant / decreasing / adaptive — Algorithms 1
-and 2).  The controller hierarchy from ``core/controller.py`` survives as the
-strategies' internal schedule state; the engine only ever sees ``actions``.
+``PeriodicAveragingStrategy`` is the shared machinery: a collective-free
+local step every iteration, and the replica-averaging sync program on the
+schedule its ``PeriodController`` picks (constant / decreasing / adaptive —
+Algorithms 1 and 2).  Both programs come from the ``ExecutionBackend``
+(``backend.replica_step`` / ``backend.all_mean``), so the same policy runs
+on one host device or sharded over a mesh.  The controller hierarchy from
+``core/controller.py`` survives as the strategies' internal schedule state;
+the engine only ever sees ``actions``.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, Optional, Type
 
-import jax
-
 from repro.configs.base import AveragingConfig
-from repro.core import averaging as avg
 from repro.core.controller import (ADPSGDController, ConstantPeriodController,
                                    DecreasingPeriodController, PeriodController)
 from repro.strategies.base import (STEP, SYNC, CommunicationStrategy,
@@ -41,10 +41,9 @@ class PeriodicAveragingStrategy(CommunicationStrategy):
                             f"got {type(controller).__name__}")
         self.controller = controller
 
-    def _build_programs(self, loss_fn, optimizer):
-        step = jax.jit(avg.make_local_step(loss_fn, optimizer))
-        sync = jax.jit(lambda W, o: avg.sync_replicas(
-            W, o, sync_momentum=self.cfg.sync_momentum))
+    def _build_programs(self, loss_fn, optimizer, backend):
+        step = backend.replica_step(loss_fn, optimizer)
+        sync = backend.all_mean(sync_momentum=self.cfg.sync_momentum)
 
         def step_prog(W, opt_state, batch, lr, key):
             W, opt_state, metrics = step(W, opt_state, batch, lr)
@@ -111,8 +110,8 @@ class FullSGDStrategy(CommunicationStrategy):
 
     name = "fullsgd"
 
-    def _build_programs(self, loss_fn, optimizer):
-        step = jax.jit(avg.make_full_step(loss_fn, optimizer))
+    def _build_programs(self, loss_fn, optimizer, backend):
+        step = backend.full_step(loss_fn, optimizer)
 
         def step_prog(W, opt_state, batch, lr, key):
             W, opt_state, metrics = step(W, opt_state, batch, lr)

@@ -12,18 +12,24 @@ The composed sync keeps a full-precision anchor (the last agreed average);
 at each sync every replica quantizes its delta from the anchor, the
 dequantized deltas are averaged, and anchor + mean-delta becomes the new
 agreed parameter value.  The first sync transmits full precision to seed the
-anchor.  The variance probe S_k is measured on the communicated
+anchor; after that the anchor is training state — it rides the checkpoint
+(``state_dict()`` exports it under ``_arrays``) so a resumed run continues
+quantized exchanges immediately instead of paying an extra full-precision
+reseed sync.  The variance probe S_k is measured on the communicated
 (dequantized) deltas, so the adaptive controller sees exactly the statistic
 the paper's Algorithm 2 lines 10-11 prescribe.
+
+Both syncs are backend primitives (``backend.all_mean`` /
+``backend.quantized_all_mean``), so the quantized exchange lowers to real
+collectives on a mesh backend.
 """
 from __future__ import annotations
 
+from typing import Any, Dict
+
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import AveragingConfig
-from repro.core import averaging as avg
-from repro.core import qsgd as qsgd_mod
 from repro.core.comm_model import ring_allreduce_bytes
 from repro.core.controller import ADPSGDController
 from repro.strategies.base import (STEP, SYNC, CommunicationStrategy,
@@ -44,9 +50,8 @@ class QSGDStrategy(CommunicationStrategy):
 
     name = "qsgd"
 
-    def _build_programs(self, loss_fn, optimizer):
-        step = jax.jit(qsgd_mod.make_qsgd_step(
-            loss_fn, optimizer, self.cfg.qsgd_bits))
+    def _build_programs(self, loss_fn, optimizer, backend):
+        step = backend.qsgd_step(loss_fn, optimizer, self.cfg.qsgd_bits)
 
         def step_prog(W, opt_state, batch, lr, key):
             W, opt_state, metrics = step(W, opt_state, batch, lr, key)
@@ -76,41 +81,21 @@ class QSGDPeriodicStrategy(PeriodicAveragingStrategy):
         super().__init__(cfg, total_steps, **kw)
         self._anchor = None          # full-precision last agreed average
 
-    def _build_programs(self, loss_fn, optimizer):
-        programs = super()._build_programs(loss_fn, optimizer)
+    def _build_programs(self, loss_fn, optimizer, backend):
+        programs = super()._build_programs(loss_fn, optimizer, backend)
         full_sync_prog = programs[SYNC]        # parent's full-precision sync
-        bits = self.cfg.qsgd_bits
-
-        @jax.jit
-        def qsync(W, anchor, key):
-            R = jax.tree_util.tree_leaves(W)[0].shape[0]
-            delta = jax.tree_util.tree_map(
-                lambda w, a: w.astype(jnp.float32) - a[None], W, anchor)
-            keys = jax.random.split(key, R)
-            dq = jax.vmap(
-                lambda d, k: qsgd_mod.quantize_pytree(d, k, bits))(delta, keys)
-            mean_d = jax.tree_util.tree_map(
-                lambda d: jnp.mean(d, axis=0), dq)
-            s_k = sum(
-                jnp.sum(jnp.square(d - m[None])) / d.shape[0]
-                for d, m in zip(jax.tree_util.tree_leaves(dq),
-                                jax.tree_util.tree_leaves(mean_d)))
-            new_anchor = jax.tree_util.tree_map(
-                lambda a, m: a + m, anchor, mean_d)
-            W_new = jax.tree_util.tree_map(
-                lambda w, a: jnp.broadcast_to(a[None], w.shape).astype(w.dtype),
-                W, new_anchor)
-            return W_new, new_anchor, s_k
+        qsync = backend.quantized_all_mean(self.cfg.qsgd_bits)
+        opt_mean = backend.opt_mean() if self.cfg.sync_momentum else None
 
         def sync_prog(W, opt_state, batch, lr, key):
             if self._anchor is None:
                 # seed the anchor: one full-precision sync
                 W, opt_state, info = full_sync_prog(W, opt_state, batch, lr, key)
-                self._anchor = avg.replica_mean(W)
+                self._anchor = self.backend.collapse(W)
                 return W, opt_state, info
             W, self._anchor, s_k = qsync(W, self._anchor, key)
-            if self.cfg.sync_momentum and opt_state is not None:
-                opt_state = avg.sync_opt_state(opt_state)
+            if opt_mean is not None and opt_state is not None:
+                opt_state = opt_mean(opt_state)
             return W, opt_state, {"s_k": s_k}
 
         programs[SYNC] = sync_prog
@@ -118,3 +103,22 @@ class QSGDPeriodicStrategy(PeriodicAveragingStrategy):
 
     def comm_bytes_per_sync(self, n_params: int, n_nodes: int) -> float:
         return qsgd_bytes_per_sync(self.cfg, n_params, n_nodes)
+
+    # ------------------------------------------------------------ checkpoint
+    # The anchor is the agreed value every later delta quantizes against —
+    # without it a restored run must reseed with a full-precision sync and
+    # its trajectory forks from the uninterrupted one.
+    def state_dict(self) -> Dict[str, Any]:
+        d = super().state_dict()
+        if self._anchor is not None:
+            d["_arrays"] = {"anchor": jax.device_get(self._anchor)}
+        return d
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        super().load_state_dict(state)
+        arrays = state.get("_arrays") or {}
+        if "anchor" in arrays:
+            anchor = arrays["anchor"]
+            if self.backend is not None:
+                anchor = self.backend.put_replicated(anchor)
+            self._anchor = anchor

@@ -51,7 +51,7 @@ def make_engine(cnn_setup, method, steps=STEPS, strategy=None, **cfg_kw):
 
 def test_registry_has_all_methods():
     for name in ("fullsgd", "cpsgd", "adpsgd", "decreasing", "qsgd",
-                 "hier_adpsgd", "qsgd_periodic"):
+                 "hier_adpsgd", "qsgd_periodic", "adacomm", "dasgd"):
         assert name in available_strategies()
         assert get_strategy_cls(name).name == name
 
@@ -113,7 +113,7 @@ def test_engine_matches_seed_loop_adpsgd(cnn_setup):
 
 @pytest.mark.parametrize("method", ["fullsgd", "cpsgd", "adpsgd",
                                     "decreasing", "qsgd", "hier_adpsgd",
-                                    "qsgd_periodic"])
+                                    "qsgd_periodic", "adacomm", "dasgd"])
 def test_every_strategy_trains(cnn_setup, method):
     h = make_engine(cnn_setup, method, inner_period=2).run()
     assert len(h.losses) == STEPS
