@@ -39,8 +39,13 @@ def run_method(method: str, p_const: int = 8, p_init: int = 4,
                steps: int = TOTAL_STEPS, n_replicas: int = N_REPLICAS,
                track_every: int = 2, warmup: int = 4,
                decreasing=(20, 5), inner_period: int = 1,
-               backend: str = "vmap") -> TrainHistory:
+               backend: str = "vmap",
+               placement: str = "replica_ddp") -> TrainHistory:
     data, params0 = setup()
+    if placement != "replica_ddp":
+        # non-default placements are a mesh-backend knob (DESIGN.md §5)
+        from repro.backends import make_backend
+        backend = make_backend(backend, placement=placement)
     cfg = AveragingConfig(
         method=method, p_init=p_init, p_const=p_const, k_sample_frac=0.25,
         warmup_full_sync_steps=warmup, decreasing_p0=decreasing[0],

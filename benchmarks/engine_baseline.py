@@ -7,10 +7,12 @@ every registered execution backend.
 The JSON gives later PRs a perf trajectory: a regression in dispatch
 overhead or a change in a strategy's sync schedule shows up as a diff.
 Top-level numbers per strategy are the vmap backend's (continuity with the
-PR-1 baseline); the ``backends`` sub-table holds the per-backend columns
-(on this container the mesh backend runs over however many host devices
-XLA_FLAGS forces — 1 by default, so its delta is pure shard_map dispatch
-overhead).
+PR-1 baseline); the ``backends`` sub-table holds one column per
+(backend, placement) cell — ``vmap``, ``mesh`` (replica_ddp) and
+``mesh_tp`` (the replica_tp placement: one replica spans the 'model' mesh
+axis).  On this container the mesh runs over however many host devices
+XLA_FLAGS forces — 1 by default, so the mesh columns' delta is pure
+shard_map/GSPMD dispatch overhead.
 """
 from __future__ import annotations
 
@@ -33,21 +35,27 @@ STEPS = 60
 def baseline(steps: int = STEPS) -> Dict[str, Dict]:   # run_method is cached
     # too, so a second call would otherwise record ~0s compile+wall times
     out: Dict[str, Dict] = {}
+    # one column per (backend, placement) cell: plain backends under their
+    # registered name, plus the mesh backend's tensor-parallel placement
+    # as 'mesh_tp' (one replica spans the 'model' mesh axis — DESIGN.md §5)
+    variants = [(bk, bk, "replica_ddp") for bk in available_backends()]
+    variants.append(("mesh_tp", "mesh", "replica_tp"))
     for name in available_strategies():
         per_backend: Dict[str, Dict] = {}
         h = None                      # the vmap history anchors the top level
-        for bk in available_backends():
+        for col, bk, placement in variants:
             t0 = time.time()
-            hb = C.run_method(name, steps=steps, inner_period=2, backend=bk)
+            hb = C.run_method(name, steps=steps, inner_period=2, backend=bk,
+                              placement=placement)
             wall = time.time() - t0
-            per_backend[bk] = {
+            per_backend[col] = {
                 "steps_per_s": round(steps / max(hb.wall_s, 1e-9), 2),
                 "wall_s": round(hb.wall_s, 3),
                 "compile_plus_wall_s": round(wall, 3),
                 "n_syncs": hb.n_syncs,
                 "final_loss": round(float(np.mean(hb.losses[-8:])), 4),
             }
-            if bk == "vmap":
+            if col == "vmap":
                 h = hb
         cm = C.comm_for(name, C.N_REPLICAS, steps, h.n_syncs, GBPS_100)
         out[name] = {

@@ -108,6 +108,13 @@ class ExecutionBackend:
         seeding, export checkpoints)."""
         return avg.replica_mean(W)
 
+    def default_group_size(self) -> Optional[int]:
+        """Topology-derived hierarchical group size (replicas per pod on a
+        multi-pod mesh), or None when the backend has no natural group
+        boundary — the hierarchical strategy then falls back to its
+        config/heuristic choice."""
+        return None
+
     # ------------------------------------------------- program builders
     # Every builder returns a compiled callable; signatures mirror the
     # core/averaging.py programs so VmapBackend is a thin wrapper.

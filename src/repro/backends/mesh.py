@@ -7,20 +7,35 @@ device advances its local replica chunk independently, and the strategy
 syncs lower to real collectives — ``jax.lax.pmean``/``psum`` over the
 replica mesh axes.  This is where the paper's communication savings become
 physical: between syncs no *parameter* tensor ever crosses the replica
-axes — the local step's only collective is the scalar metrics mean
-(loss/grad-norm telemetry, a handful of floats for the engine's history),
-so skipping a sync genuinely skips the parameter all-reduce.  Moving even
-that scalar pmean off the step is a ROADMAP item.
+axes, and the local step's HLO carries **zero replica-axis collectives** —
+per-replica scalar metrics (loss/grad-norm telemetry) come back stacked and
+are reduced by a separate tiny program off the step path, so skipping a
+sync genuinely skips every cross-replica round.
 
-Replicas are whole-model copies here (``replica_ddp`` placement: parameters
-replicated inside a replica, batch split across replicas).  Composing
-tensor-parallel sharding *inside* each replica over a ``model`` axis is the
-documented next step (DESIGN.md §5) — the spec machinery in
-``launch/sharding.py`` already expresses it.
+Two **placements** decide what one replica is (DESIGN.md §5):
+
+* ``replica_ddp`` (default) — each replica is a whole-model copy; the
+  leading replica axis is the only sharded dim and every program is a
+  fully-manual ``shard_map`` over the replica axes.
+* ``replica_tp``  — one replica *spans* the mesh's ``model`` axis: inner
+  parameter dims shard with the megatron-style ``base_spec`` rules from
+  ``launch/sharding.py`` (column/row-parallel matmuls, vocab-parallel
+  embeddings), threaded through ``put_params``/``put_opt`` and pinned on
+  program outputs.  Programs become *partial-manual* ``shard_map``s:
+  manual over the replica axes (``data``/``pod``) so the replica-axis
+  collectives stay explicit ``lax.pmean``/``psum``, while the ``model``
+  axis is left to GSPMD (``auto={'model'}``), which inserts the
+  intra-replica tensor-parallel collectives where the matmuls need them.
+
+Cross-replica syncs are identical under both placements — the replica mean
+is elementwise, so it never needs a model-axis exchange.  Checkpoints are
+placement-neutral: ``device_get`` gathers to host arrays and the restoring
+backend re-``put``s them under its own placement.
 
 On this CPU container the mesh is whatever ``XLA_FLAGS=
---xla_force_host_platform_device_count=N`` provides (tests force 8); on a
-TPU pod the same code takes ``launch/mesh.py``'s production mesh.
+--xla_force_host_platform_device_count=N`` provides (tests force 8, split
+4 data x 2 model for ``replica_tp``); on a TPU pod the same code takes
+``launch/mesh.py``'s production mesh.
 """
 from __future__ import annotations
 
@@ -44,16 +59,21 @@ Pytree = Any
 _tm = jax.tree_util.tree_map
 _leaves = jax.tree_util.tree_leaves
 
+PLACEMENTS = ("replica_ddp", "replica_tp")
+
 
 @register_backend
 class MeshBackend(ExecutionBackend):
     """Replica axis over the mesh's ``data``/``pod`` axes, ``shard_map``
-    programs, ``lax.pmean`` syncs."""
+    programs, ``lax.pmean`` syncs; ``placement`` picks whole-copy replicas
+    (``replica_ddp``) or model-axis-spanning ones (``replica_tp``)."""
 
     name = "mesh"
 
     def __init__(self, mesh: Optional[Mesh] = None, *,
                  model_cfg: Optional[ModelConfig] = None,
+                 placement: str = "replica_ddp",
+                 model_parallel: Optional[int] = None,
                  multi_pod: bool = False,
                  use_kernel: Optional[bool] = None):
         if use_kernel:
@@ -65,9 +85,19 @@ class MeshBackend(ExecutionBackend):
                 "syncs to lax.pmean (use --sync-kernel auto/off with "
                 "--backend mesh)")
         super().__init__(use_kernel=False)
+        if placement not in PLACEMENTS:
+            raise ValueError(
+                f"unknown placement '{placement}'; available: {PLACEMENTS}")
         if mesh is None:
-            mesh = mesh_mod.make_host_mesh()
+            if model_parallel is None:
+                # replica_tp wants a nontrivial model axis when the device
+                # count allows one; replica_ddp keeps every device a replica
+                n = len(jax.devices())
+                model_parallel = 2 if (placement == "replica_tp"
+                                       and n > 1 and n % 2 == 0) else 1
+            mesh = mesh_mod.make_host_mesh(model_parallel)
         self.mesh = mesh
+        self.placement = placement
         sizes = dict(mesh.shape)
         self.replica_axes: Tuple[str, ...] = tuple(
             a for a in ("pod", "data") if a in mesh.axis_names)
@@ -75,15 +105,27 @@ class MeshBackend(ExecutionBackend):
             raise ValueError(
                 f"mesh {mesh.axis_names} has no replica axis "
                 "('data' or 'pod'); see launch/mesh.py")
+        if placement == "replica_tp" and "model" not in mesh.axis_names:
+            raise ValueError(
+                f"placement 'replica_tp' needs a 'model' mesh axis, "
+                f"got {mesh.axis_names}")
         self.n_replica_devices = int(
             np.prod([sizes[a] for a in self.replica_axes]))
         self._entry = (self.replica_axes if len(self.replica_axes) > 1
                        else self.replica_axes[0])
         self._model_cfg = model_cfg or ModelConfig()
-        # replica_ddp placement: each replica is a full model copy — the
-        # replica axis is the only sharded dim (launch/sharding.py)
-        self._plan = ParallelismPlan(plan="replica_ddp")
+        # replica_ddp: each replica is a full model copy, the replica axis
+        # is the only sharded dim; replica_tp: inner dims additionally take
+        # the megatron base_spec rules over 'model' (launch/sharding.py)
+        self._plan = ParallelismPlan(
+            plan="replica_dp" if placement == "replica_tp" else "replica_ddp",
+            placement=placement)
+        # partial-manual shard_map: manual over the replica axes, every
+        # other mesh axis (the 'model' axis) left to GSPMD
+        self._auto = (frozenset(set(mesh.axis_names) - set(self.replica_axes))
+                      if placement == "replica_tp" else frozenset())
         self._cache: Dict[Any, Any] = {}
+        self._ridx = None              # cached global replica-index array
 
     # ------------------------------------------------------------- topology
     def bind(self, n_replicas: int) -> None:
@@ -98,25 +140,42 @@ class MeshBackend(ExecutionBackend):
         return {"backend": self.name, "n_replicas": self.n_replicas,
                 "n_devices": len(self.mesh.devices.reshape(-1)),
                 "mesh": dict(self.mesh.shape),
+                "placement": self.placement,
                 "replica_axes": list(self.replica_axes)}
 
+    def default_group_size(self) -> Optional[int]:
+        """Replicas per pod, read off the mesh — the natural hierarchical
+        group boundary (ROADMAP multi-pod item): inner syncs then ride the
+        fast in-pod ICI and never the cross-pod link."""
+        sizes = dict(self.mesh.shape)
+        pods = sizes.get("pod", 1)
+        if pods > 1 and self.n_replicas:
+            return max(1, self.n_replicas // pods)
+        return None
+
     # ------------------------------------------------------------ placement
-    def put_params(self, W: Pytree) -> Pytree:
+    def _param_shardings(self, W: Pytree) -> Pytree:
         specs = shard_rules.param_specs(
             self._model_cfg, W, self.mesh, self._plan,
             replica_axes=self.replica_axes, stacked=True)
-        return jax.device_put(W, shard_rules.named(self.mesh, specs))
+        return shard_rules.named(self.mesh, specs)
 
-    def put_opt(self, opt_state: Pytree, W: Pytree) -> Pytree:
-        if not _leaves(opt_state):
-            return opt_state
+    def _opt_shardings(self, opt_state: Pytree, W: Pytree) -> Pytree:
         pspecs = shard_rules.param_specs(
             self._model_cfg, W, self.mesh, self._plan,
             replica_axes=self.replica_axes, stacked=True)
         ospecs = shard_rules.opt_specs(
             self._model_cfg, opt_state, pspecs, self.mesh, self._plan,
             replica_axes=self.replica_axes, stacked=True)
-        return jax.device_put(opt_state, shard_rules.named(self.mesh, ospecs))
+        return shard_rules.named(self.mesh, ospecs)
+
+    def put_params(self, W: Pytree) -> Pytree:
+        return jax.device_put(W, self._param_shardings(W))
+
+    def put_opt(self, opt_state: Pytree, W: Pytree) -> Pytree:
+        if not _leaves(opt_state):
+            return opt_state
+        return jax.device_put(opt_state, self._opt_shardings(opt_state, W))
 
     def put_replicated(self, tree: Pytree) -> Pytree:
         return jax.device_put(tree, NamedSharding(self.mesh, P()))
@@ -126,13 +185,24 @@ class MeshBackend(ExecutionBackend):
 
     # ----------------------------------------------------------- internals
     def _stacked(self, tree: Pytree) -> Pytree:
-        """Per-leaf spec: leading replica dim over the replica axes (specs
-        shorter than the leaf rank pad with None — remaining dims stay
-        replicated inside the replica)."""
+        """Per-leaf shard_map spec: leading replica dim over the replica
+        axes.  Only the *manual* axes appear here — under ``replica_tp``
+        the inner-dim 'model' sharding is GSPMD's (seeded by the operands'
+        shardings, pinned on outputs via ``out_shardings``)."""
         return _tm(lambda x: P(self._entry), tree)
 
     def _replicated(self, tree: Pytree) -> Pytree:
         return _tm(lambda x: P(), tree)
+
+    def _pin(self, *shardings):
+        """jit ``out_shardings`` pinning the placement's parameter layout on
+        program outputs (None = let GSPMD choose).  Only ``replica_tp``
+        needs it — without the pin GSPMD tends to rematerialize outputs
+        replicated over 'model', silently losing the TP layout.  Entries
+        may be thunks so replica_ddp builds never pay the spec walk."""
+        if self.placement != "replica_tp":
+            return None
+        return tuple(s() if callable(s) else s for s in shardings)
 
     def _cached(self, kind: str, trees, build):
         key = (kind, tuple(
@@ -144,17 +214,24 @@ class MeshBackend(ExecutionBackend):
             fn = self._cache[key] = build()
         return fn
 
-    def _shmap(self, chunk, in_specs, out_specs):
-        return jax.jit(shard_map(chunk, mesh=self.mesh, in_specs=in_specs,
-                                 out_specs=out_specs, check_rep=False))
+    def _shmap(self, chunk, in_specs, out_specs, out_shardings=None):
+        fn = shard_map(chunk, mesh=self.mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False, auto=self._auto)
+        if out_shardings is not None:
+            return jax.jit(fn, out_shardings=out_shardings)
+        return jax.jit(fn)
 
-    def _replica_offset(self):
-        """Index of this device along the flattened replica axes (inside a
-        shard_map body)."""
-        idx = 0
-        for ax in self.replica_axes:
-            idx = idx * jax.lax.psum(1, ax) + jax.lax.axis_index(ax)
-        return idx
+    def _replica_index(self):
+        """Global replica indices (R,), fed to RNG-bearing programs as a
+        stacked operand — each chunk then sees its replicas' global ids.
+        An explicit operand rather than ``lax.axis_index`` because the
+        latter lowers to a PartitionId instruction that GSPMD rejects
+        inside replica_tp's partial-manual (auto 'model') regions.
+        Cached: qsgd_step rides the per-step hot path."""
+        ridx = self._ridx
+        if ridx is None or ridx.shape[0] != self.n_replicas:
+            ridx = self._ridx = jnp.arange(self.n_replicas, dtype=jnp.int32)
+        return ridx
 
     def _pmean(self, x):
         return jax.lax.pmean(x, self.replica_axes)
@@ -166,35 +243,50 @@ class MeshBackend(ExecutionBackend):
                                     keepdims=True))
 
     def _probe(self, W_chunk, means):
-        """S_k = (1/R) Σ_i ||w̄ − w_i||² from local partials + one psum."""
+        """S_k = (1/R) Σ_i ||w̄ − w_i||² from local partials + one psum.
+        Under replica_tp the per-leaf sums run over model-sharded dims —
+        GSPMD supplies the intra-replica reduction; the replica-axis psum
+        stays the only manual collective."""
         s_loc = sum(jnp.sum(jnp.square(x.astype(jnp.float32) - m))
                     for x, m in zip(_leaves(W_chunk), _leaves(means)))
         return jax.lax.psum(s_loc, self.replica_axes) / self.n_replicas
 
-    def _local_keys(self, key, r_local):
-        """Per-replica RNG keys derived from the *global* replica index, so
-        the stream is independent of how replicas map to devices."""
-        off = self._replica_offset() * r_local
-        return jax.vmap(lambda i: jax.random.fold_in(key, off + i))(
-            jnp.arange(r_local))
+    @staticmethod
+    def _local_keys(key, ridx):
+        """Per-replica RNG keys from the chunk's *global* replica indices —
+        the shared ``qsgd.replica_keys`` stream, so it is independent of
+        how replicas map to devices and matches VmapBackend bit-for-bit."""
+        return qsgd_mod.replica_keys(key, ridx)
+
+    def _metrics_mean(self, metrics: Pytree) -> Pytree:
+        """Replica mean of stacked per-replica metrics — a separate tiny
+        program, so the cross-replica round never rides the step's HLO
+        (the engine reads the scalar back each iteration anyway)."""
+        fn = self._cached("metrics_mean", (metrics,), lambda: jax.jit(
+            lambda m: _tm(lambda x: jnp.mean(x, axis=0), m)))
+        return fn(metrics)
 
     # ------------------------------------------------------------- programs
     def replica_step(self, loss_fn, optimizer):
         one_replica = avg.make_replica_step(loss_fn, optimizer)
 
         def chunk(Wc, oc, bc, lr):
-            Wn, on, m = jax.vmap(one_replica, in_axes=(0, 0, 0, None))(
+            # per-chunk metrics stay stacked: the step program carries zero
+            # replica-axis collectives (tested on its lowered HLO)
+            return jax.vmap(one_replica, in_axes=(0, 0, 0, None))(
                 Wc, oc, bc, lr)
-            metrics = _tm(lambda x: self._pmean(jnp.mean(x, axis=0)), m)
-            return Wn, on, metrics
 
         def prog(W, opt_state, batch, lr):
             fn = self._cached("step", (W, opt_state, batch), lambda: self._shmap(
                 chunk,
                 (self._stacked(W), self._stacked(opt_state),
                  self._stacked(batch), P()),
-                (self._stacked(W), self._stacked(opt_state), P())))
-            return fn(W, opt_state, batch, lr)
+                (self._stacked(W), self._stacked(opt_state), P(self._entry)),
+                out_shardings=self._pin(
+                    lambda: self._param_shardings(W),
+                    lambda: self._opt_shardings(opt_state, W), None)))
+            W, opt_state, m = fn(W, opt_state, batch, lr)
+            return W, opt_state, self._metrics_mean(m)
 
         return prog
 
@@ -216,7 +308,10 @@ class MeshBackend(ExecutionBackend):
                 chunk,
                 (self._stacked(W), self._stacked(opt_state),
                  self._stacked(batch), P()),
-                (self._stacked(W), self._stacked(opt_state), P())))
+                (self._stacked(W), self._stacked(opt_state), P()),
+                out_shardings=self._pin(
+                    lambda: self._param_shardings(W),
+                    lambda: self._opt_shardings(opt_state, W), None)))
             return fn(W, opt_state, batch, lr)
 
         return prog
@@ -224,10 +319,9 @@ class MeshBackend(ExecutionBackend):
     def qsgd_step(self, loss_fn, optimizer, bits):
         grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
-        def chunk(Wc, oc, bc, lr, key):
+        def chunk(Wc, oc, bc, lr, key, ridx):
             (loss, aux), grads = jax.vmap(grad_fn)(Wc, bc)
-            r_local = _leaves(Wc)[0].shape[0]
-            keys = self._local_keys(key, r_local)
+            keys = self._local_keys(key, ridx)
             q = jax.vmap(lambda g, k: qsgd_mod.quantize_pytree(g, k, bits))(
                 grads, keys)
             g_mean = _tm(self._leaf_mean, q)
@@ -243,9 +337,12 @@ class MeshBackend(ExecutionBackend):
             fn = self._cached("qsgd", (W, opt_state, batch), lambda: self._shmap(
                 chunk,
                 (self._stacked(W), self._stacked(opt_state),
-                 self._stacked(batch), P(), P()),
-                (self._stacked(W), self._stacked(opt_state), P())))
-            return fn(W, opt_state, batch, lr, key)
+                 self._stacked(batch), P(), P(), P(self._entry)),
+                (self._stacked(W), self._stacked(opt_state), P()),
+                out_shardings=self._pin(
+                    lambda: self._param_shardings(W),
+                    lambda: self._opt_shardings(opt_state, W), None)))
+            return fn(W, opt_state, batch, lr, key, self._replica_index())
 
         return prog
 
@@ -265,7 +362,10 @@ class MeshBackend(ExecutionBackend):
                 f"all_mean{int(sync_momentum)}", (W, opt_state),
                 lambda: self._shmap(
                     chunk, (self._stacked(W), self._stacked(opt_state)),
-                    (self._stacked(W), self._stacked(opt_state), P())))
+                    (self._stacked(W), self._stacked(opt_state), P()),
+                    out_shardings=self._pin(
+                        lambda: self._param_shardings(W),
+                        lambda: self._opt_shardings(opt_state, W), None)))
             return fn(W, opt_state)
 
         return prog
@@ -278,9 +378,15 @@ class MeshBackend(ExecutionBackend):
         def prog(opt_state):
             if not _leaves(opt_state):
                 return opt_state
+            # the pin reuses the parameter rules directly on the optimizer
+            # tree — its paths are the param paths under a state-key prefix
+            # and the rules are suffix-anchored, so buffers land on the
+            # same TP layout put_opt gave them
             fn = self._cached("opt_mean", (opt_state,), lambda: self._shmap(
                 chunk, (self._stacked(opt_state),),
-                self._stacked(opt_state)))
+                self._stacked(opt_state),
+                out_shardings=(self._param_shardings(opt_state)
+                               if self.placement == "replica_tp" else None)))
             return fn(opt_state)
 
         return prog
@@ -309,7 +415,10 @@ class MeshBackend(ExecutionBackend):
                 raise NotImplementedError(
                     f"group_size={g} does not align with {r_local} local "
                     f"replicas per device")
-            return self._shmap(chunk, (self._stacked(W),), self._stacked(W))
+            return self._shmap(
+                chunk, (self._stacked(W),), self._stacked(W),
+                out_shardings=(self._param_shardings(W)
+                               if self.placement == "replica_tp" else None))
 
         def prog(W):
             return self._cached(f"inner{g}", (W,), lambda: build(W))(W)
@@ -330,11 +439,10 @@ class MeshBackend(ExecutionBackend):
                 for i in range(0, inner, devices_per_group)]
 
     def quantized_all_mean(self, bits: int):
-        def chunk(Wc, anchor, key):
-            r_local = _leaves(Wc)[0].shape[0]
+        def chunk(Wc, anchor, key, ridx):
             delta = _tm(lambda w, a: w.astype(jnp.float32) - a[None],
                         Wc, anchor)
-            keys = self._local_keys(key, r_local)
+            keys = self._local_keys(key, ridx)
             dq = jax.vmap(lambda d, k: qsgd_mod.quantize_pytree(d, k, bits))(
                 delta, keys)
             mean_d = _tm(lambda d: self._pmean(jnp.mean(d, axis=0)), dq)
@@ -349,9 +457,12 @@ class MeshBackend(ExecutionBackend):
         def prog(W, anchor, key):
             fn = self._cached("qam", (W, anchor), lambda: self._shmap(
                 chunk,
+                (self._stacked(W), self._replicated(anchor), P(),
+                 P(self._entry)),
                 (self._stacked(W), self._replicated(anchor), P()),
-                (self._stacked(W), self._replicated(anchor), P())))
-            return fn(W, anchor, key)
+                out_shardings=self._pin(
+                    lambda: self._param_shardings(W), None, None)))
+            return fn(W, anchor, key, self._replica_index())
 
         return prog
 
@@ -363,8 +474,12 @@ class MeshBackend(ExecutionBackend):
             return delta, s_k
 
         def prog(W):
+            # the delta is parameter-shaped strategy state held for `delay`
+            # steps (DaSGD) — pin it to the TP layout so it never sits
+            # model-replicated on the mesh
             fn = self._cached("mean_delta", (W,), lambda: self._shmap(
-                chunk, (self._stacked(W),), (self._stacked(W), P())))
+                chunk, (self._stacked(W),), (self._stacked(W), P()),
+                out_shardings=self._pin(lambda: self._param_shardings(W), None)))
             return fn(W)
 
         return prog

@@ -63,7 +63,7 @@ class VmapBackend(ExecutionBackend):
             R = jax.tree_util.tree_leaves(W)[0].shape[0]
             delta = jax.tree_util.tree_map(
                 lambda w, a: w.astype(jnp.float32) - a[None], W, anchor)
-            keys = jax.random.split(key, R)
+            keys = qsgd_mod.replica_keys(key, jnp.arange(R))
             dq = jax.vmap(
                 lambda d, k: qsgd_mod.quantize_pytree(d, k, bits))(delta, keys)
             mean_d = jax.tree_util.tree_map(

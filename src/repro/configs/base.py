@@ -211,9 +211,17 @@ class ParallelismPlan:
     plan = 'fsdp'       : synchronous DP with parameter sharding over 'data'
         + tensor over 'model'; ADPSGD applies over the 'pod' axis when the
         mesh has one (DiLoCo-style hierarchical deployment).
+
+    ``placement`` names how the execution backend lays replicas out
+    (DESIGN.md §5): 'replica_ddp' keeps each replica a whole-model copy on
+    its own replica-axis slot; 'replica_tp' lets one replica *span* the
+    'model' mesh axis, sharding inner parameter dims with the megatron
+    ``base_spec`` rules (partial-manual shard_map: manual over data/pod,
+    'model' left to GSPMD).
     """
 
     plan: str = "replica_dp"      # replica_dp | fsdp | replica_ddp
+    placement: str = "replica_ddp"  # replica_ddp | replica_tp
     shard_activations: bool = True
     remat_policy: str = "full"    # full | dots | none
     vocab_parallel_embed: bool = True   # megatron vocab-parallel embedding

@@ -47,6 +47,14 @@ def dequantize(levels: jnp.ndarray, norm: jnp.ndarray, bits: int = 8,
     return (levels.astype(jnp.float32) * (norm / s)).astype(dtype)
 
 
+def replica_keys(key, idx):
+    """Per-replica RNG keys: ``fold_in`` on the *global* replica index.
+    The single definition every backend shares — cross-backend/placement
+    parity of the quantization noise depends on these streams matching
+    bit-for-bit, so never derive per-replica keys any other way."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(idx)
+
+
 def quantize_pytree(grads: Pytree, key, bits: int = 8) -> Pytree:
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     keys = jax.random.split(key, len(leaves))
@@ -65,7 +73,7 @@ def make_qsgd_step(loss_fn, optimizer: Optimizer, bits: int = 8):
     def step(W, opt_state, batch, lr, key):
         (loss, aux), grads = jax.vmap(grad_fn)(W, batch)
         R = jax.tree_util.tree_leaves(W)[0].shape[0]
-        keys = jax.random.split(key, R)
+        keys = replica_keys(key, jnp.arange(R))
         q = jax.vmap(lambda g, k: quantize_pytree(g, k, bits))(grads, keys)
         g_mean = jax.tree_util.tree_map(
             lambda g: jnp.mean(g.astype(jnp.float32), axis=0, keepdims=True),

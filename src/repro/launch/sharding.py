@@ -91,6 +91,12 @@ def _rules(cfg: ModelConfig, vocab_parallel: bool = True):
         (r"dt_proj_w$", col),
         (r"conv_w$|conv_b$", col),
         (r"w_if$|b_i$|b_f$|ogate_norm$|\br$|\bgn$", rep),
+        # compact CNN (models/cnn.py — the paper-faithful CIFAR stand-in):
+        # conv output channels and fc1 columns shard over 'model', fc2 rows
+        # contract over it — so placement tests/benches exercise real TP
+        (r"convs\|#\d+\|[wb]$", col),
+        (r"fc1\|[wb]$", col),
+        (r"fc2\|w$", row),
         (r".*", rep),                   # norms, biases, scalars
     ]
 

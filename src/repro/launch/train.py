@@ -9,7 +9,10 @@ a plugin registers); ``--backend`` any name in ``repro/backends`` (vmap =
 host device; mesh = replica axis sharded over the devices jax sees —
 on this container set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
 to give the mesh N host devices, on a real cluster the same driver takes
-the production mesh from launch/mesh.py).
+the production mesh from launch/mesh.py).  ``--placement replica_tp`` lets
+one mesh replica span the 'model' mesh axis (megatron-style tensor
+parallelism inside each replica — DESIGN.md §5 "Placements");
+``--model-parallel`` sizes that axis on the host mesh.
 """
 from __future__ import annotations
 
@@ -45,6 +48,16 @@ def main():
                     choices=["auto", "on", "off"],
                     help="fused Pallas mean+sqdev kernel in the sync "
                          "(auto = on TPU only, where it is profitable)")
+    ap.add_argument("--placement", default="replica_ddp",
+                    choices=["replica_ddp", "replica_tp"],
+                    help="mesh-backend replica layout: replica_ddp = each "
+                         "replica is a whole-model copy; replica_tp = one "
+                         "replica spans the 'model' mesh axis "
+                         "(megatron-style TP inside each replica)")
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="model-axis size of the host mesh (0 = auto: 2 "
+                         "for replica_tp when the device count is even, "
+                         "else 1)")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4, help="per-replica batch")
@@ -94,7 +107,14 @@ def main():
     loss_fn = make_loss_fn(cfg)
     strategy = make_strategy(avg_cfg, args.steps)
     use_kernel = {"auto": None, "on": True, "off": False}[args.sync_kernel]
-    backend = make_backend(args.backend, use_kernel=use_kernel)
+    backend_kw = dict(use_kernel=use_kernel)
+    if args.backend == "mesh":
+        backend_kw.update(placement=args.placement,
+                          model_parallel=args.model_parallel or None)
+    elif args.placement != "replica_ddp" or args.model_parallel:
+        ap.error("--placement/--model-parallel are mesh-backend options "
+                 "(use --backend mesh)")
+    backend = make_backend(args.backend, **backend_kw)
 
     callbacks = []
     if args.eval_every:

@@ -2,7 +2,10 @@
 
 Inner (in-pod, fast ICI) syncs average contiguous replica groups at a small
 constant period; the outer (cross-pod, slow link) sync is the paper's
-adaptive one.  This wires the previously-dead
+adaptive one.  When ``cfg.group_size`` is unset the group size comes from
+the backend's topology (``backend.default_group_size()`` — replicas per pod
+on a multi-pod mesh), so the hierarchy aligns with the pod boundary without
+configuration.  This wires the previously-dead
 ``HierarchicalADPSGDController.inner_sync_now`` path end-to-end: the inner
 counter is consulted every iteration, and an outer sync subsumes the inner
 one (the global average already equalizes every group).  The inner average
@@ -48,7 +51,10 @@ class HierarchicalADPSGDStrategy(PeriodicAveragingStrategy):
 
         def inner_prog(W, opt_state, batch, lr, key):
             R = jax.tree_util.tree_leaves(W)[0].shape[0]
-            g = group_cfg or max(1, R // 2)
+            # group size: config wins; otherwise the backend's topology
+            # (replicas per pod on a multi-pod mesh) so inner syncs align
+            # with the pod boundary; else half the replicas form one group
+            g = group_cfg or backend.default_group_size() or max(1, R // 2)
             while R % g:
                 g -= 1
             if g not in built:

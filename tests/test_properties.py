@@ -6,11 +6,14 @@ import pytest
 
 pytest.importorskip("hypothesis")  # listed in requirements.txt; optional here
 from hypothesis import given, settings, strategies as stf  # noqa: E402
+from jax.sharding import AbstractMesh, PartitionSpec as P  # noqa: E402
 
-from repro.configs import AveragingConfig
+from repro.configs import AveragingConfig, ModelConfig  # noqa: E402
+from repro.configs.base import ParallelismPlan  # noqa: E402
 from repro.core import averaging as avg
 from repro.core import qsgd
 from repro.core.controller import ADPSGDController, ConstantPeriodController
+from repro.launch import sharding as sh  # noqa: E402
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
@@ -124,3 +127,95 @@ def test_optimizers_reduce_quadratic(R, dim, rnd):
         for _ in range(30):
             params, st = opt.update(g(params), st, params, jnp.float32(lr))
         assert float(loss_fn(params, None)[0]) < l0
+
+
+# ---------------------------------------------------------------------------
+# base_spec divisibility guards (launch/sharding.py): a dim is sharded only
+# if the mesh axis divides it; odd sizes fall back to replication, and every
+# produced PartitionSpec must be valid for the mesh.
+# ---------------------------------------------------------------------------
+
+
+def _abstract_mesh(sizes, names):
+    try:
+        return AbstractMesh(tuple(zip(names, sizes)))
+    except TypeError:
+        return AbstractMesh(sizes, names)
+
+
+def _check_spec_valid(spec, shape, mesh):
+    """GSPMD validity: named axes exist, appear at most once across the
+    spec, and divide the dim they shard."""
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    seen = []
+    assert len(spec) <= len(shape)
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            assert a in sizes, (spec, mesh.axis_names)
+            assert a not in seen, f"axis {a} used twice in {spec}"
+            seen.append(a)
+        total = int(np.prod([sizes[a] for a in axes]))
+        assert dim % total == 0, (spec, shape, sizes)
+
+
+# paths drawn from the real rule table: megatron projections, embeddings,
+# MoE experts, CNN fc/conv — plus an unmatched path (catch-all replication)
+_PATHS_2D = ["embed", "lm_head", "wq|w", "wo|w", "w_up|w", "w_down|w",
+             "fc1|w", "fc2|w", "mystery|w"]
+
+
+@given(stf.sampled_from(_PATHS_2D),
+       stf.integers(1, 4099), stf.integers(1, 515),
+       stf.sampled_from([2, 3, 4, 8, 16]))
+def test_base_spec_divisibility_guard(path, d0, d1, m):
+    mesh = _abstract_mesh((4, m), ("data", "model"))
+    plan = ParallelismPlan(plan="replica_dp", placement="replica_tp")
+    spec = sh.base_spec(ModelConfig(), path, (d0, d1), mesh, plan)
+    _check_spec_valid(spec, (d0, d1), mesh)
+    # odd sizes on *both* dims -> full fallback to replication
+    if d0 % m and d1 % m:
+        assert all(s is None for s in spec), (path, spec)
+
+
+@given(stf.integers(1, 4099), stf.sampled_from([2, 4, 8, 16]))
+def test_vocab_parallel_embed_falls_back(vocab, m):
+    """Odd vocab sizes fall back from vocab-parallel to d-model sharding
+    (and to replication when d_model is odd too)."""
+    mesh = _abstract_mesh((4, m), ("data", "model"))
+    plan = ParallelismPlan(plan="replica_dp")
+    d_model = 8 * m
+    spec = sh.base_spec(ModelConfig(), "embed", (vocab, d_model), mesh, plan)
+    if vocab % m == 0:
+        assert spec == ("model", None)
+    else:
+        assert spec == (None, "model")
+    _check_spec_valid(spec, (vocab, d_model), mesh)
+
+
+@given(stf.integers(2, 9), stf.integers(1, 129), stf.integers(1, 129),
+       stf.sampled_from([2, 4, 8]), stf.booleans())
+def test_param_specs_always_valid_for_mesh(R_pow, d0, d1, m, two_pod):
+    """Stacked param_specs over a pytree with odd/even dims stay valid for
+    1- and 2-pod meshes under the replica_tp plan; the leading entry is
+    always the replica-axis entry."""
+    R = 4 * R_pow      # replica-axis divisibility is bind()'s runtime guard,
+    #                    not param_specs' — keep R a multiple of the 4
+    #                    replica devices both meshes have
+    mesh = (_abstract_mesh((2, 2, m), ("pod", "data", "model")) if two_pod
+            else _abstract_mesh((4, m), ("data", "model")))
+    rep = ("pod", "data") if two_pod else ("data",)
+    tree = {"fc1": {"w": np.zeros((R, d0, d1)), "b": np.zeros((R, d1))},
+            "odd": {"w": np.zeros((R, d0))}}
+    specs = sh.param_specs(ModelConfig(), tree, mesh,
+                           ParallelismPlan(plan="replica_dp",
+                                           placement="replica_tp"),
+                           replica_axes=rep, stacked=True)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda s: isinstance(s, P))
+    flat_x = jax.tree_util.tree_leaves(tree)
+    for spec, x in zip(flat_s, flat_x):
+        assert spec[0] == (rep if len(rep) > 1 else rep[0])
+        _check_spec_valid(spec, x.shape, mesh)
