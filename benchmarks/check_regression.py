@@ -1,0 +1,102 @@
+"""CI bench-regression gate: compare a freshly measured engine baseline
+against the committed ``BENCH_engine.json``.
+
+    PYTHONPATH=src python benchmarks/engine_baseline.py \
+        --net 10gbps --net 100gbps --out BENCH_fresh.json
+    PYTHONPATH=src python benchmarks/check_regression.py \
+        BENCH_engine.json BENCH_fresh.json
+
+Per strategy x simulated network the gate checks the ``timed`` columns —
+the ones that are deterministic under a ``SimulatedClock`` and therefore
+meaningful to gate on a shared CI runner (host wall-clock columns are
+machine-dependent and only reported, never gated):
+
+* ``final_loss``  — the run converges no worse (within ``--loss-tol``,
+  relative; a loss that *improves* never fails).
+* ``sim_wall_s``  — the simulated wall-clock regresses by no more than
+  ``--time-tol`` (relative).  A schedule change that syncs more often, a
+  program dispatched extra times, or bytes growing all surface here.
+* ``n_syncs``     — the sync schedule itself is deterministic; any drift
+  is reported (gated with the time tolerance via sim_wall_s anyway, but a
+  count change is the clearest diagnostic).
+
+Strategies present only in the fresh file are fine (new code); strategies
+*missing* from the fresh file fail (coverage regression).  Exit code 0 =
+pass, 1 = regression (CI fails the job and uploads the fresh JSON as an
+artifact for inspection).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+
+def _timed(doc: Dict) -> Dict[str, Dict[str, Dict]]:
+    return {name: row.get("timed", {})
+            for name, row in doc.get("strategies", {}).items()}
+
+
+def compare(base: Dict, fresh: Dict, *, loss_tol: float,
+            time_tol: float) -> List[str]:
+    """Return the list of regression messages (empty = pass)."""
+    problems: List[str] = []
+    tb, tf = _timed(base), _timed(fresh)
+    for name, nets in sorted(tb.items()):
+        if not nets:
+            continue
+        if name not in tf or not tf[name]:
+            problems.append(f"{name}: missing from fresh baseline")
+            continue
+        for net, cols in sorted(nets.items()):
+            got = tf[name].get(net)
+            if got is None:
+                problems.append(f"{name}/{net}: missing from fresh baseline")
+                continue
+            lb, lf = cols["final_loss"], got["final_loss"]
+            if lf > lb * (1 + loss_tol):
+                problems.append(
+                    f"{name}/{net}: final_loss {lf} vs baseline {lb} "
+                    f"(> +{loss_tol:.0%})")
+            wb, wf = cols["sim_wall_s"], got["sim_wall_s"]
+            if wf > wb * (1 + time_tol):
+                problems.append(
+                    f"{name}/{net}: sim_wall_s {wf} vs baseline {wb} "
+                    f"(> +{time_tol:.0%})")
+            if got["n_syncs"] != cols["n_syncs"]:
+                problems.append(
+                    f"{name}/{net}: n_syncs {got['n_syncs']} vs baseline "
+                    f"{cols['n_syncs']} (schedule drift)")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("baseline", help="committed BENCH_engine.json")
+    ap.add_argument("fresh", help="freshly measured engine baseline JSON")
+    ap.add_argument("--loss-tol", type=float, default=0.05,
+                    help="relative final-loss regression tolerance")
+    ap.add_argument("--time-tol", type=float, default=0.10,
+                    help="relative simulated-wall-clock regression tolerance")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    if not any(_timed(base).values()):
+        print("check_regression: baseline has no timed columns — "
+              "regenerate BENCH_engine.json with --net first", file=sys.stderr)
+        return 1
+    problems = compare(base, fresh, loss_tol=args.loss_tol,
+                       time_tol=args.time_tol)
+    for p in problems:
+        print(f"REGRESSION: {p}")
+    if not problems:
+        n = sum(len(nets) for nets in _timed(base).values())
+        print(f"bench-gate OK: {n} strategy x net cells within tolerance")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,25 +1,48 @@
-"""Per-strategy engine baseline: steps/s, sync counts and modeled comm
-bytes for every registered strategy on the reduced CIFAR-style config, on
-every registered execution backend.
+"""Per-strategy engine baseline: steps/s, sync counts, comm bytes and
+**measured (simulated-clock) wall-clock** for every registered strategy on
+the reduced CIFAR-style config.
 
+    PYTHONPATH=src python benchmarks/engine_baseline.py --net 10gbps
+    PYTHONPATH=src python benchmarks/engine_baseline.py --net 100gbps
     PYTHONPATH=src python -m benchmarks.run --engine-json BENCH_engine.json
 
 The JSON gives later PRs a perf trajectory: a regression in dispatch
-overhead or a change in a strategy's sync schedule shows up as a diff.
-Top-level numbers per strategy are the vmap backend's (continuity with the
-PR-1 baseline); the ``backends`` sub-table holds one column per
-(backend, placement) cell — ``vmap``, ``mesh`` (replica_ddp) and
-``mesh_tp`` (the replica_tp placement: one replica spans the 'model' mesh
-axis).  On this container the mesh runs over however many host devices
-XLA_FLAGS forces — 1 by default, so the mesh columns' delta is pure
-shard_map/GSPMD dispatch overhead.
+overhead, a change in a strategy's sync schedule, or a simulated wall-clock
+slowdown shows up as a diff (and fails CI's ``bench-gate`` job via
+``benchmarks/check_regression.py``).
+
+Two kinds of columns:
+
+* ``backends`` — host wall-clock per (backend, placement) cell: ``vmap``,
+  ``mesh`` (replica_ddp) and ``mesh_tp`` (replica_tp).  On this container
+  the mesh runs over however many host devices XLA_FLAGS forces — 1 by
+  default, so the mesh columns' delta is pure shard_map/GSPMD dispatch
+  overhead.
+* ``timed`` — per simulated network (10/100 Gbps): the run is executed
+  under a ``SimulatedClock`` (runtime/clock.py) and every dispatched
+  program charges compute + per-collective communication, so
+  ``sim_wall_s``/``sim_comm_s`` are *measured from execution* (which
+  programs actually ran, with their actual bytes) rather than the old
+  offline ``modeled_comm_s`` estimate — and they are bit-reproducible on
+  CPU CI.  ``speedup_vs_fullsgd`` is the paper's Fig 4c/5c/6 statistic;
+  the ADPSGD speedup must be larger at 10 Gbps than at 100 Gbps.
 """
 from __future__ import annotations
 
+import argparse
 import functools
 import json
+import os
+import subprocess
+import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+if __package__ in (None, ""):
+    # `python benchmarks/engine_baseline.py` puts benchmarks/ (not the repo
+    # root) on sys.path; add the root so `import benchmarks` resolves
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
 
 from benchmarks import common as C
 from repro.backends import available_backends
@@ -29,6 +52,7 @@ from repro.strategies import available_strategies
 import numpy as np
 
 STEPS = 60
+NETS = ("10gbps", "100gbps")
 
 
 @functools.lru_cache(maxsize=None)   # rows() + write_json share one result:
@@ -68,10 +92,110 @@ def baseline(steps: int = STEPS) -> Dict[str, Dict]:   # run_method is cached
             "final_loss": per_backend["vmap"]["final_loss"],
             "mean_period": round(steps / max(1, h.n_syncs), 2),
             "comm_bytes_per_node": cm.bytes_per_node * cm.n_events,
-            "modeled_comm_s_100gbps": cm.time_s,
             "backends": per_backend,
         }
     return out
+
+
+@functools.lru_cache(maxsize=None)
+def timed_baseline(net: str, steps: int = STEPS) -> Dict[str, Dict]:
+    """One SimulatedClock run per strategy on ``net``: the measured
+    (simulated) wall-clock / comm-time columns, plus the paper's
+    speedup-vs-FULLSGD statistic computed from the executed runs."""
+    cols: Dict[str, Dict] = {}
+    for name in available_strategies():
+        h = C.run_method(name, steps=steps, inner_period=2, net=net)
+        t = h.timing
+        cols[name] = {
+            "sim_wall_s": round(t["sim_wall_s"], 6),
+            "sim_compute_s": round(t["compute_s"], 6),
+            "sim_comm_s": round(t["comm_s"], 6),
+            "comm_bytes_per_node": round(t["bytes"], 1),
+            "n_syncs": h.n_syncs,
+            "final_loss": round(float(np.mean(h.losses[-8:])), 4),
+        }
+    full = cols.get("fullsgd", {}).get("sim_wall_s")
+    for name, c in cols.items():
+        c["speedup_vs_fullsgd"] = (
+            round(full / c["sim_wall_s"], 4) if full else None)
+    return cols
+
+
+# ---------------------------------------------------------------------------
+# inner_mean vs the cross-pod path on a forced 2-pod mesh (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+_POD_BENCH_SCRIPT = r"""
+import json, os, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax
+from repro.backends.mesh import MeshBackend
+from repro.core import averaging as avg
+from repro.models.cnn import init_cnn
+from repro.optim import get_optimizer
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+b = MeshBackend(mesh=mesh)
+b.bind(8)
+W = b.put_params(avg.stack_replicas(
+    init_cnn(jax.random.PRNGKey(0), widths=(16, 32)), 8))
+ost = b.init_opt_state(get_optimizer("sgd"), W)
+g = b.default_group_size()                      # 4 = replicas per pod
+inner = b.inner_mean(g)
+allm = b.all_mean()
+
+def bench(fn, n=20):
+    jax.block_until_ready(fn())                 # compile
+    t0 = time.monotonic()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / n
+
+t_inner = bench(lambda: inner(W))
+t_cross = bench(lambda: allm(W, ost)[0])
+print(json.dumps({"wall_inner_mean_s": t_inner, "wall_all_mean_s": t_cross,
+                  "mesh": dict(mesh.shape), "group_size": g}))
+"""
+
+
+def pod_bench(nets=NETS) -> Optional[Dict]:
+    """Benchmark the in-pod ``inner_mean`` against the cross-pod
+    ``all_mean`` on a forced 8-device 2-pod dry-run, and price both under
+    the per-collective simulated network model (the hierarchical strategy's
+    whole premise is that the inner path is the cheap one)."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", _POD_BENCH_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    if r.returncode != 0:
+        print(f"# pod_bench failed:\n{r.stderr}", file=sys.stderr)
+        return None
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    # simulated charges for the same exchange (per event, per node)
+    from repro.core.comm_model import comm_time, ring_allreduce_bytes
+    from repro.runtime.clock import resolve_net
+    n_par = C.n_params()
+    for net in nets:
+        nm = resolve_net(net)
+        out[f"sim_inner_s_{net}"] = comm_time(
+            ring_allreduce_bytes(n_par, out["group_size"]), 1,
+            out["group_size"], nm.intra, collective="inner_mean",
+            latency_s=nm.latency_s)
+        out[f"sim_cross_s_{net}"] = comm_time(
+            ring_allreduce_bytes(n_par, C.N_REPLICAS), 1, C.N_REPLICAS,
+            nm.bandwidth, collective="all_reduce", latency_s=nm.latency_s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Output
+# ---------------------------------------------------------------------------
 
 
 def rows(steps: int = STEPS) -> List[str]:
@@ -84,9 +208,64 @@ def rows(steps: int = STEPS) -> List[str]:
     return out
 
 
-def write_json(path: str, steps: int = STEPS) -> None:
+def write_json(path: str, steps: int = STEPS, nets=NETS,
+               include_backends: bool = True,
+               include_pod_bench: bool = True) -> None:
+    """Write (or update) the engine baseline JSON.  When the file already
+    exists and a table is not being regenerated, its previous values are
+    kept — so ``--net``-only runs refresh the timed columns without paying
+    for the 3-backend wall table and vice versa."""
+    doc: Dict = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc["config"] = {"n_replicas": C.N_REPLICAS,
+                     "per_replica_batch": C.PER_REPLICA_BATCH,
+                     "steps": steps, "base_lr": C.BASE_LR,
+                     "sim_step_compute_s": C.SIM_STEP_COMPUTE_S}
+    strategies = doc.setdefault("strategies", {})
+    if include_backends:
+        for name, row in baseline(steps).items():
+            row = dict(row)
+            prev = strategies.get(name, {})
+            if "timed" in prev:
+                row["timed"] = prev["timed"]
+            strategies[name] = row
+    for net in nets:
+        for name, cols in timed_baseline(net, steps).items():
+            strategies.setdefault(name, {}).setdefault(
+                "timed", {})[net] = cols
+    if include_pod_bench:
+        pb = pod_bench(nets)
+        if pb is not None:
+            doc["hier_inner_vs_cross"] = pb
     with open(path, "w") as f:
-        json.dump({"config": {"n_replicas": C.N_REPLICAS,
-                              "per_replica_batch": C.PER_REPLICA_BATCH,
-                              "steps": steps, "base_lr": C.BASE_LR},
-                   "strategies": baseline(steps)}, f, indent=2, sort_keys=True)
+        json.dump(doc, f, indent=2, sort_keys=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--net", action="append", default=None,
+                    metavar="10gbps|100gbps|<x>gbps",
+                    help="simulated network(s) for the timed columns "
+                         "(repeatable; default: 10gbps and 100gbps)")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--steps", type=int, default=STEPS)
+    ap.add_argument("--full", action="store_true",
+                    help="also regenerate the per-backend wall-clock table "
+                         "(slow: every strategy x vmap/mesh/mesh_tp)")
+    ap.add_argument("--pod-bench", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="include the forced-2-pod inner_mean vs cross-pod "
+                         "all_mean rows")
+    args = ap.parse_args()
+    nets = tuple(args.net) if args.net else NETS
+    write_json(args.out, steps=args.steps, nets=nets,
+               include_backends=args.full,
+               include_pod_bench=args.pod_bench)
+    print(f"# engine baseline -> {args.out} (nets={','.join(nets)}"
+          f"{', +backends' if args.full else ''})")
+
+
+if __name__ == "__main__":
+    main()

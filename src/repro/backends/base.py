@@ -46,8 +46,30 @@ from typing import Any, Callable, Dict, List, Optional, Type
 import jax
 
 from repro.core import averaging as avg
+from repro.core.comm_model import ring_allreduce_bytes
 
 Pytree = Any
+
+# Communication shape of every backend program, keyed by program name:
+# (is_step, collective, bytes_scale).  ``is_step`` programs charge the
+# per-step compute cost on a SimulatedClock; ``collective`` (None = no
+# cross-replica exchange) and ``bytes_scale`` (x the full-precision ring
+# all-reduce volume) price the exchange -- quantized programs move
+# ``bits/32`` of the volume as a gather+broadcast (latency NOT reduced,
+# paper §IV), ``inner_mean`` prices a ring *within one group* (the clock
+# receives the group size, not the world size).  See runtime/clock.py and
+# core/comm_model.COLLECTIVE_HOPS.
+PROGRAM_COMM: Dict[str, tuple] = {
+    "replica_step": (True, None, 0.0),
+    "full_step": (True, "all_reduce", 1.0),
+    "qsgd_step": (True, "gather_bcast", None),      # None -> bits/32
+    "all_mean": (False, "all_reduce", 1.0),
+    "opt_mean": (False, "all_reduce", 1.0),
+    "quantized_all_mean": (False, "gather_bcast", None),
+    "inner_mean": (False, "inner_mean", 1.0),
+    "mean_delta": (False, "all_reduce", 1.0),
+    "apply_delta": (False, None, 0.0),              # collective-free add
+}
 
 
 class ExecutionBackend:
@@ -67,6 +89,7 @@ class ExecutionBackend:
             use_kernel = jax.default_backend() == "tpu"
         self.use_kernel = bool(use_kernel)
         self.n_replicas: Optional[int] = None
+        self.clock = None              # telemetry clock (runtime/clock.py)
 
     # ------------------------------------------------------------- topology
     def bind(self, n_replicas: int) -> None:
@@ -79,6 +102,45 @@ class ExecutionBackend:
         """Telemetry: where the replicas live (benchmarks record this)."""
         return {"backend": self.name, "n_replicas": self.n_replicas,
                 "n_devices": 1}
+
+    # ------------------------------------------------------------ telemetry
+    def set_clock(self, clock) -> None:
+        """Bind a ``runtime/clock.py`` Clock.  Every program built by this
+        backend is wrapped by ``timed``; the wrapper consults ``self.clock``
+        at call time, so binding before or after compilation both work and
+        ``None`` (the default) keeps dispatch entirely un-instrumented."""
+        self.clock = clock
+
+    def timed(self, name: str, fn: Callable, *, bits: Optional[int] = None,
+              group_size: Optional[int] = None) -> Callable:
+        """Wrap a compiled program so each invocation reports one
+        ``(compute_s, comm_s, bytes)`` record into the bound clock's
+        ``Timeline``.  The communication shape comes from ``PROGRAM_COMM``;
+        bytes are computed per invocation from the stacked operand (its
+        leaf sizes / n_replicas = per-replica parameter count), so one
+        wrapper serves every shape the program is dispatched with."""
+        is_step, collective, scale = PROGRAM_COMM[name]
+        if scale is None:
+            scale = (bits or 32) / 32.0
+
+        def wrapped(*args):
+            clock = self.clock
+            if clock is None:
+                return fn(*args)
+            nbytes, n = 0.0, self.n_replicas or 1
+            if collective is not None:
+                if name == "inner_mean" and group_size:
+                    n = int(group_size)
+                tree = args[0]
+                n_params = sum(
+                    x.size for x in jax.tree_util.tree_leaves(tree))
+                n_params //= max(1, self.n_replicas or 1)
+                nbytes = ring_allreduce_bytes(n_params, n) * scale
+            return clock.measure(name, fn, args, is_step=is_step,
+                                 comm_bytes=nbytes, collective=collective,
+                                 n_nodes=n)
+
+        return wrapped
 
     # ------------------------------------------------------------ placement
     def put_params(self, W: Pytree) -> Pytree:
@@ -169,7 +231,7 @@ class ExecutionBackend:
                     lambda w, d: (w.astype(jnp.float32) + d).astype(w.dtype),
                     W, delta)
             self._apply_delta_fn = jax.jit(apply)
-        return self._apply_delta_fn
+        return self.timed("apply_delta", self._apply_delta_fn)
 
 
 # ---------------------------------------------------------------------------

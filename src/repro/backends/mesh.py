@@ -288,7 +288,7 @@ class MeshBackend(ExecutionBackend):
             W, opt_state, m = fn(W, opt_state, batch, lr)
             return W, opt_state, self._metrics_mean(m)
 
-        return prog
+        return self.timed("replica_step", prog)
 
     def full_step(self, loss_fn, optimizer):
         grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
@@ -314,7 +314,7 @@ class MeshBackend(ExecutionBackend):
                     lambda: self._opt_shardings(opt_state, W), None)))
             return fn(W, opt_state, batch, lr)
 
-        return prog
+        return self.timed("full_step", prog)
 
     def qsgd_step(self, loss_fn, optimizer, bits):
         grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
@@ -344,7 +344,7 @@ class MeshBackend(ExecutionBackend):
                     lambda: self._opt_shardings(opt_state, W), None)))
             return fn(W, opt_state, batch, lr, key, self._replica_index())
 
-        return prog
+        return self.timed("qsgd_step", prog, bits=bits)
 
     def all_mean(self, *, sync_momentum: bool = False):
         def chunk(Wc, oc):
@@ -368,7 +368,7 @@ class MeshBackend(ExecutionBackend):
                         lambda: self._opt_shardings(opt_state, W), None)))
             return fn(W, opt_state)
 
-        return prog
+        return self.timed("all_mean", prog)
 
     def opt_mean(self):
         def chunk(oc):
@@ -389,7 +389,7 @@ class MeshBackend(ExecutionBackend):
                                if self.placement == "replica_tp" else None)))
             return fn(opt_state)
 
-        return prog
+        return self.timed("opt_mean", prog)
 
     def inner_mean(self, group_size: int):
         g = int(group_size)
@@ -423,7 +423,7 @@ class MeshBackend(ExecutionBackend):
         def prog(W):
             return self._cached(f"inner{g}", (W,), lambda: build(W))(W)
 
-        return prog
+        return self.timed("inner_mean", prog, group_size=g)
 
     def _device_groups(self, devices_per_group: int):
         """Contiguous device groups along the innermost replica axis.
@@ -464,7 +464,7 @@ class MeshBackend(ExecutionBackend):
                     lambda: self._param_shardings(W), None, None)))
             return fn(W, anchor, key, self._replica_index())
 
-        return prog
+        return self.timed("quantized_all_mean", prog, bits=bits)
 
     def mean_delta(self):
         def chunk(Wc):
@@ -482,7 +482,7 @@ class MeshBackend(ExecutionBackend):
                 out_shardings=self._pin(lambda: self._param_shardings(W), None)))
             return fn(W)
 
-        return prog
+        return self.timed("mean_delta", prog)
 
     def collapse(self, W: Pytree) -> Pytree:
         # eager global mean works on sharded arrays; result is unsharded

@@ -34,25 +34,35 @@ class VmapBackend(ExecutionBackend):
         return d
 
     # ------------------------------------------------------------- programs
+    # every builder returns through self.timed(...): with a bound clock each
+    # invocation reports (compute_s, comm_s, bytes) into the Timeline, with
+    # no clock the wrapper is pass-through (backends/base.py)
     def replica_step(self, loss_fn, optimizer):
-        return jax.jit(avg.make_local_step(loss_fn, optimizer))
+        return self.timed(
+            "replica_step", jax.jit(avg.make_local_step(loss_fn, optimizer)))
 
     def full_step(self, loss_fn, optimizer):
-        return jax.jit(avg.make_full_step(loss_fn, optimizer))
+        return self.timed(
+            "full_step", jax.jit(avg.make_full_step(loss_fn, optimizer)))
 
     def qsgd_step(self, loss_fn, optimizer, bits):
-        return jax.jit(qsgd_mod.make_qsgd_step(loss_fn, optimizer, bits))
+        return self.timed(
+            "qsgd_step",
+            jax.jit(qsgd_mod.make_qsgd_step(loss_fn, optimizer, bits)),
+            bits=bits)
 
     def all_mean(self, *, sync_momentum: bool = False):
         use_kernel = self.use_kernel
-        return jax.jit(lambda W, o: avg.sync_replicas(
-            W, o, sync_momentum=sync_momentum, use_kernel=use_kernel))
+        return self.timed("all_mean", jax.jit(lambda W, o: avg.sync_replicas(
+            W, o, sync_momentum=sync_momentum, use_kernel=use_kernel)))
 
     def inner_mean(self, group_size: int):
-        return jax.jit(lambda W: avg.group_sync(W, group_size))
+        return self.timed("inner_mean",
+                          jax.jit(lambda W: avg.group_sync(W, group_size)),
+                          group_size=group_size)
 
     def opt_mean(self):
-        return jax.jit(avg.sync_opt_state)
+        return self.timed("opt_mean", jax.jit(avg.sync_opt_state))
 
     def quantized_all_mean(self, bits: int):
         """QSGD-quantized parameter deltas from a shared full-precision
@@ -79,7 +89,7 @@ class VmapBackend(ExecutionBackend):
                 W, new_anchor)
             return W_new, new_anchor, s_k
 
-        return qsync
+        return self.timed("quantized_all_mean", qsync, bits=bits)
 
     def mean_delta(self):
         @jax.jit
@@ -95,4 +105,4 @@ class VmapBackend(ExecutionBackend):
                 lambda x, m: m - x.astype(jnp.float32), W, means)
             return d, s_k
 
-        return delta
+        return self.timed("mean_delta", delta)

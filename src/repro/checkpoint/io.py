@@ -59,7 +59,8 @@ def _unflatten(flat: Dict[str, np.ndarray]) -> Pytree:
 def save_checkpoint(path: str, params: Pytree, *,
                     opt_state: Optional[Pytree] = None,
                     step: int = 0,
-                    controller_state: Optional[Dict] = None) -> None:
+                    controller_state: Optional[Dict] = None,
+                    clock_state: Optional[Dict] = None) -> None:
     os.makedirs(path, exist_ok=True)
     np.savez(os.path.join(path, "params.npz"),
              **_flatten(jax.device_get(params)))
@@ -74,6 +75,11 @@ def save_checkpoint(path: str, params: Pytree, *,
     elif os.path.exists(arr_path):
         os.remove(arr_path)            # don't resurrect a stale anchor
     meta = {"step": step, "controller": state}
+    if clock_state is not None:
+        # telemetry-clock state (runtime/clock.py): time-driven schedules
+        # (wall-clock AdaComm) must resume the same t0-block mid-block, so
+        # the clock's coordinates are training state like the controller's
+        meta["clock"] = clock_state
     with open(os.path.join(path, "meta.json"), "w") as f:
         json.dump(meta, f)
 

@@ -253,8 +253,13 @@ class AveragingConfig:
     inner_period: int = 1
     group_size: int = 0
     # AdaComm (Wang & Joshi, arXiv:1810.08313): refresh the period every
-    # `adacomm_interval` steps as tau = ceil(p_init * sqrt(F_t / F_0))
+    # `adacomm_interval` steps as tau = ceil(p_init * sqrt(F_t / F_0)).
+    # adacomm_mode='time' uses the paper's wall-clock form instead: blocks
+    # of `adacomm_t0` *seconds* on the engine's telemetry clock, with
+    # straggler rescaling (runtime/clock.py; controller AdaCommTimeController)
     adacomm_interval: int = 20
+    adacomm_mode: str = "iterations"   # iterations | time
+    adacomm_t0: float = 1.0            # seconds per adaptation block
     # DaSGD (arXiv:2006.00441): the averaged correction from a sync at step
     # k is applied at step k + dasgd_delay (overlap window)
     dasgd_delay: int = 2

@@ -27,18 +27,41 @@ def ring_allreduce_bytes(n_params: int, n_nodes: int, bytes_per_el: int = 4) -> 
     return 2.0 * (n_nodes - 1) / n_nodes * n_params * bytes_per_el
 
 
+# Latency hops per collective type.  A ring all-reduce is reduce-scatter +
+# all-gather: 2(n-1) sequential hops.  A plain ring all-gather is (n-1).
+# QSGD's quantized levels are not ring-reducible, so the exchange is a
+# gather + broadcast -- 2(n-1) hops, i.e. the latency is NOT reduced even
+# though the volume is (paper §IV).  A hierarchical inner mean is a ring
+# all-reduce *within one group*: the caller passes the group size as
+# ``n_nodes`` and the hops count that group only -- never the full ring
+# (the old unconditional 2(n-1) overcharged hierarchical strategies).
+COLLECTIVE_HOPS = {
+    "all_reduce": lambda n: 2 * (n - 1),
+    "all_gather": lambda n: n - 1,
+    "gather_bcast": lambda n: 2 * (n - 1),
+    "inner_mean": lambda n: 2 * (n - 1),
+}
+
+
 def comm_time(bytes_per_event: float, n_events: int, n_nodes: int,
-              bandwidth: float) -> float:
+              bandwidth: float, *, collective: str = "all_reduce",
+              latency_s: float = LATENCY_S) -> float:
     """Wall-clock of ``n_events`` collectives of ``bytes_per_event`` each —
     the generic accounting hook the strategy API builds its ``comm_stats``
-    on (``CommunicationStrategy.comm_bytes_per_sync`` supplies the bytes)."""
-    lat = LATENCY_S * 2 * (n_nodes - 1)
+    on (``CommunicationStrategy.comm_bytes_per_sync`` supplies the bytes).
+    ``collective`` picks the latency-hop structure (``COLLECTIVE_HOPS``);
+    for ``inner_mean`` pass the *group* size as ``n_nodes``."""
+    if collective not in COLLECTIVE_HOPS:
+        raise ValueError(f"unknown collective '{collective}'; "
+                         f"available: {sorted(COLLECTIVE_HOPS)}")
+    lat = latency_s * COLLECTIVE_HOPS[collective](n_nodes)
     return n_events * (bytes_per_event / bandwidth + lat)
 
 
 def method_comm(method: str, n_params: int, n_nodes: int, total_steps: int,
                 n_syncs: int, bandwidth: float, qsgd_bits: int = 8) -> CommStats:
     """Total communication for a training run, per node."""
+    coll = "all_reduce"
     if method in ("fullsgd",):
         per = ring_allreduce_bytes(n_params, n_nodes)
         ev = total_steps
@@ -51,10 +74,12 @@ def method_comm(method: str, n_params: int, n_nodes: int, total_steps: int,
         # paper charges 1/4 of FULLSGD bytes, latency NOT reduced.
         per = ring_allreduce_bytes(n_params, n_nodes) * qsgd_bits / 32.0
         ev = total_steps
+        coll = "gather_bcast"
     else:
         raise ValueError(method)
     # prefer strategies.comm_stats_for for new code
-    return CommStats(per, ev, comm_time(per, ev, n_nodes, bandwidth))
+    return CommStats(per, ev, comm_time(per, ev, n_nodes, bandwidth,
+                                        collective=coll))
 
 
 def speedup_vs_fullsgd(method: str, n_params: int, n_nodes: int,

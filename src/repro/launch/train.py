@@ -31,6 +31,7 @@ from repro.data.pipeline import SyntheticTokens
 from repro.launch.steps import make_loss_fn
 from repro.models import model as M
 from repro.optim import get_optimizer, make_lr_schedule
+from repro.runtime.clock import make_clock
 from repro.runtime.engine import Checkpointer, PeriodicEval, TrainerEngine
 from repro.strategies import available_strategies, make_strategy
 
@@ -58,6 +59,20 @@ def main():
                     help="model-axis size of the host mesh (0 = auto: 2 "
                          "for replica_tp when the device count is even, "
                          "else 1)")
+    ap.add_argument("--net", default="none",
+                    help="telemetry clock (runtime/clock.py): 'none' = no "
+                         "instrumentation, 'real' = WallClock around "
+                         "block-until-ready dispatches, '10gbps'/'100gbps'/"
+                         "'<x>gbps' = SimulatedClock charging compute per "
+                         "step and communication from the analytic model "
+                         "at that bandwidth (bit-reproducible)")
+    ap.add_argument("--adacomm-mode", default="iterations",
+                    choices=["iterations", "time"],
+                    help="adacomm block definition: 'iterations' (interval "
+                         "of steps) or 'time' (t0-second wall-clock blocks "
+                         "on the --net clock, the paper's form)")
+    ap.add_argument("--adacomm-t0", type=float, default=1.0,
+                    help="seconds per adacomm_mode=time adaptation block")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--batch", type=int, default=4, help="per-replica batch")
@@ -91,7 +106,12 @@ def main():
     avg_cfg = AveragingConfig(
         method=args.method, p_init=args.p_init, p_const=args.p_const,
         warmup_full_sync_steps=args.warmup_sync, k_sample_frac=0.25,
-        inner_period=args.inner_period)
+        inner_period=args.inner_period, adacomm_mode=args.adacomm_mode,
+        adacomm_t0=args.adacomm_t0)
+    clock = make_clock(args.net)
+    if args.adacomm_mode == "time" and clock is None:
+        ap.error("--adacomm-mode time needs a clock: pass --net "
+                 "real|10gbps|100gbps|<x>gbps")
     lr = args.lr if args.lr is not None else min(run.learning_rate, 0.05)
     lr_fn = make_lr_schedule(
         "step", lr, args.steps,
@@ -131,7 +151,7 @@ def main():
         loss_fn=loss_fn, optimizer=opt, params0=params0,
         n_replicas=args.replicas, data_fn=data_fn, lr_fn=lr_fn,
         avg_cfg=avg_cfg, total_steps=args.steps, strategy=strategy,
-        backend=backend, callbacks=callbacks,
+        backend=backend, clock=clock, callbacks=callbacks,
         track_variance_every=max(1, args.steps // 50), seed=args.seed)
     t0 = time.time()
     hist = engine.run()
@@ -151,6 +171,12 @@ def main():
               + " ".join(f"{k}={v:.4f}" for k, v in hist.evals[-1].items()))
     print(f"  weighted-avg Var[W_k] (paper Eq.9) = "
           f"{hist.weighted_avg_variance():.3e}")
+    if hist.timing:
+        t = hist.timing
+        print(f"  [{t['clock']} clock / {args.net}] "
+              f"compute={t['compute_s']:.3f}s comm={t['comm_s']:.3f}s "
+              f"total={t['sim_wall_s']:.3f}s "
+              f"bytes/node={t['bytes']:.3e}")
     if args.ckpt:
         from repro.core.averaging import replica_mean
         save_checkpoint(args.ckpt, replica_mean(hist.final_W),
@@ -168,7 +194,8 @@ def main():
                        "periods": hist.period_history,
                        "inner_sync_steps": hist.inner_sync_steps,
                        "variances": hist.variances,
-                       "variance_steps": hist.variance_steps}, f)
+                       "variance_steps": hist.variance_steps,
+                       "timing": hist.timing}, f)
         print(f"  history -> {args.out}")
 
 

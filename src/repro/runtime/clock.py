@@ -1,0 +1,297 @@
+"""Telemetry clocks: wall-clock and simulated time for the training loop.
+
+The paper's headline claims are *wall-clock* claims (1.14-1.27x over
+full-communication SGD at 100 Gbps, 1.46-1.95x at 10 Gbps), so time is a
+first-class engine citizen.  A ``Clock`` is bound to the
+``ExecutionBackend`` (``backend.set_clock``); every compiled program the
+backend hands a strategy is wrapped by ``backend.timed(...)`` and reports
+one ``ProgramTiming`` — ``(compute_s, comm_s, bytes)`` — per invocation
+into the clock's ``Timeline`` (DESIGN.md §6).
+
+Two implementations:
+
+* ``WallClock``      — real ``time.monotonic()`` around dispatched,
+  block-until-ready program calls.  A fused program (``full_step``) cannot
+  split its measured time, so the whole measurement is attributed to the
+  program's *primary* cost: compute for step programs, communication for
+  sync programs; the modeled bytes ride along either way.
+* ``SimulatedClock`` — never blocks and never reads the host clock.
+  Compute is charged from a per-step cost (``step_compute_s``, times the
+  ``straggler`` slowdown — the block waits for the slowest replica) and
+  communication from ``core/comm_model.py``'s per-collective
+  ``comm_time`` under a configurable ``NetworkModel`` (``10gbps`` /
+  ``100gbps`` / any ``<x>gbps``).  Simulated time is a pure function of
+  the dispatch sequence, so timing-dependent behavior (the wall-clock
+  AdaComm controller, the bench-regression gate) is bit-reproducible on
+  CPU CI.
+
+Clock state is training state: the time-based AdaComm schedule continues
+*mid-block* across a checkpoint/restore, so ``state_dict`` /
+``load_state_dict`` ride ``checkpoint/io.py`` next to the strategy state.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+from repro.core.comm_model import GBPS_10, GBPS_100, LATENCY_S, comm_time
+
+# program names the backends charge as per-step compute (the local or
+# fused-gradient step); everything else is sync machinery
+STEP_PROGRAMS = ("replica_step", "full_step", "qsgd_step")
+
+
+# ---------------------------------------------------------------------------
+# Network model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NetworkModel:
+    """The simulated link: the paper's 100 Gbps InfiniBand vs. the
+    throttled 10 Gbps, plus the fast in-pod link hierarchical inner syncs
+    ride (``intra_bandwidth``, defaults to the cross-pod bandwidth)."""
+
+    name: str = "100gbps"
+    bandwidth: float = GBPS_100          # bytes/s, cross-replica link
+    latency_s: float = LATENCY_S         # per hop (comm_model.LATENCY_S)
+    intra_bandwidth: Optional[float] = None   # in-pod link (inner_mean)
+
+    @property
+    def intra(self) -> float:
+        return self.intra_bandwidth or self.bandwidth
+
+
+_NETS = {
+    "10gbps": NetworkModel("10gbps", GBPS_10),
+    "100gbps": NetworkModel("100gbps", GBPS_100),
+}
+
+
+def resolve_net(spec) -> NetworkModel:
+    """``'10gbps'`` / ``'100gbps'`` / ``'<x>gbps'`` / NetworkModel."""
+    if isinstance(spec, NetworkModel):
+        return spec
+    s = str(spec).lower()
+    if s in _NETS:
+        return _NETS[s]
+    if s.endswith("gbps"):
+        return NetworkModel(s, float(s[:-4]) * 1e9 / 8)
+    raise ValueError(f"unknown network '{spec}'; "
+                     f"use one of {sorted(_NETS)} or '<x>gbps'")
+
+
+# ---------------------------------------------------------------------------
+# Timeline
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ProgramTiming:
+    """One program invocation's cost report."""
+
+    name: str                 # program name ("all_mean", "replica_step", …)
+    step: int                 # engine iteration the dispatch belonged to
+    compute_s: float = 0.0
+    comm_s: float = 0.0
+    bytes: float = 0.0        # modeled bytes per node moved by the program
+    t_start: float = 0.0      # clock coordinates
+    t_end: float = 0.0
+
+
+class Timeline:
+    """Per-invocation ``ProgramTiming`` records plus running aggregates.
+
+    Carried by ``TrainerEngine`` (``engine.timeline``); the engine stamps
+    ``timeline.step`` before each iteration's dispatches.  Aggregates are
+    O(1) per record; the record list itself is what benchmarks and tests
+    introspect (bounded runs — cap or sample externally for very long
+    ones)."""
+
+    def __init__(self):
+        self.records: List[ProgramTiming] = []
+        self.step = 0
+        self.compute_s = 0.0
+        self.comm_s = 0.0
+        self.bytes = 0.0
+        self.by_program: Dict[str, Dict[str, float]] = {}
+
+    def record(self, t: ProgramTiming) -> None:
+        self.records.append(t)
+        self.compute_s += t.compute_s
+        self.comm_s += t.comm_s
+        self.bytes += t.bytes
+        agg = self.by_program.setdefault(
+            t.name, {"calls": 0, "compute_s": 0.0, "comm_s": 0.0,
+                     "bytes": 0.0})
+        agg["calls"] += 1
+        agg["compute_s"] += t.compute_s
+        agg["comm_s"] += t.comm_s
+        agg["bytes"] += t.bytes
+
+    @property
+    def last(self) -> Optional[ProgramTiming]:
+        return self.records[-1] if self.records else None
+
+    @property
+    def total_s(self) -> float:
+        return self.compute_s + self.comm_s
+
+    def summary(self) -> Dict[str, Any]:
+        return {"compute_s": self.compute_s, "comm_s": self.comm_s,
+                "total_s": self.total_s, "bytes": self.bytes,
+                "n_records": len(self.records),
+                "by_program": {k: dict(v)
+                               for k, v in self.by_program.items()}}
+
+
+# ---------------------------------------------------------------------------
+# Clocks
+# ---------------------------------------------------------------------------
+
+
+class Clock:
+    """Base: owns the ``Timeline``; concrete clocks implement ``now`` and
+    ``measure`` (called by ``ExecutionBackend.timed`` wrappers)."""
+
+    kind = "base"
+
+    def __init__(self):
+        self.timeline = Timeline()
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def straggler_factor(self) -> float:
+        """Slowest-replica slowdown (>= 1) the wall-clock AdaComm
+        controller rescales its period by; 1 when unknown/homogeneous."""
+        return 1.0
+
+    def comm_cost(self, comm_bytes: float, collective: Optional[str],
+                  n_nodes: int) -> float:
+        """Modeled seconds for one collective of ``comm_bytes`` per node
+        over ``n_nodes`` — 0 unless the clock simulates a network."""
+        return 0.0
+
+    def measure(self, name: str, fn, args, *, is_step: bool,
+                comm_bytes: float = 0.0, collective: Optional[str] = None,
+                n_nodes: int = 1):
+        """Run program ``fn(*args)`` and record one ``ProgramTiming``.
+        ``comm_bytes``/``collective``/``n_nodes`` are the backend's modeled
+        communication shape for this invocation (``collective=None`` for
+        collective-free programs)."""
+        raise NotImplementedError
+
+    # clock state is training state (the time-based AdaComm block schedule
+    # must continue mid-block across restore) — see checkpoint/io.py
+    def state_dict(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "t": self.now()}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+
+class WallClock(Clock):
+    """Real elapsed time: ``time.monotonic()`` around dispatched,
+    block-until-ready program calls.  ``load_state_dict`` re-bases the
+    epoch so a restored run's ``now()`` continues from the saved time."""
+
+    kind = "wall"
+
+    def __init__(self):
+        super().__init__()
+        self._start = time.monotonic()
+        self._base = 0.0
+
+    def now(self) -> float:
+        return time.monotonic() - self._start + self._base
+
+    def measure(self, name, fn, args, *, is_step, comm_bytes=0.0,
+                collective=None, n_nodes=1):
+        import jax
+        t0 = self.now()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        dt = self.now() - t0
+        # a fused program can't split compute from comm: attribute the
+        # measurement to the program's primary cost (docstring above)
+        self.timeline.record(ProgramTiming(
+            name=name, step=self.timeline.step,
+            compute_s=dt if is_step else 0.0,
+            comm_s=0.0 if is_step else dt,
+            bytes=comm_bytes, t_start=t0, t_end=t0 + dt))
+        return out
+
+    def load_state_dict(self, state):
+        self._base = float(state.get("t", 0.0))
+        self._start = time.monotonic()
+
+
+class SimulatedClock(Clock):
+    """Deterministic time: compute charged per step program, communication
+    charged from the per-collective analytic model.  Never blocks — the
+    async dispatch pipeline is untouched and results are bit-identical to
+    an un-clocked run."""
+
+    kind = "sim"
+
+    def __init__(self, net="100gbps", *, step_compute_s: float = 5e-3,
+                 straggler: float = 1.0):
+        super().__init__()
+        self.net = resolve_net(net)
+        self.step_compute_s = float(step_compute_s)
+        if straggler < 1.0:
+            raise ValueError("straggler slowdown must be >= 1")
+        self.straggler = float(straggler)
+        self._t = 0.0
+
+    def now(self) -> float:
+        return self._t
+
+    def straggler_factor(self) -> float:
+        return self.straggler
+
+    def comm_cost(self, comm_bytes, collective, n_nodes):
+        if collective is None or n_nodes <= 1:
+            return 0.0
+        bw = self.net.intra if collective == "inner_mean" else \
+            self.net.bandwidth
+        return comm_time(comm_bytes, 1, n_nodes, bw, collective=collective,
+                         latency_s=self.net.latency_s)
+
+    def measure(self, name, fn, args, *, is_step, comm_bytes=0.0,
+                collective=None, n_nodes=1):
+        out = fn(*args)
+        # every replica waits for the slowest one at the next collective,
+        # so the charged compute is the straggler-stretched one
+        compute = self.step_compute_s * self.straggler if is_step else 0.0
+        comm_s = self.comm_cost(comm_bytes, collective, n_nodes)
+        t0 = self._t
+        self._t += compute + comm_s
+        self.timeline.record(ProgramTiming(
+            name=name, step=self.timeline.step, compute_s=compute,
+            comm_s=comm_s, bytes=comm_bytes, t_start=t0, t_end=self._t))
+        return out
+
+    def state_dict(self):
+        d = super().state_dict()
+        d["net"] = self.net.name
+        return d
+
+    def load_state_dict(self, state):
+        self._t = float(state.get("t", 0.0))
+
+
+def make_clock(spec) -> Optional[Clock]:
+    """Driver-flag resolution: ``None``/``'none'`` -> no clock,
+    ``'real'``/``'wall'`` -> WallClock, anything else -> SimulatedClock
+    on that network (``'10gbps'``, ``'100gbps'``, ``'<x>gbps'``)."""
+    if spec is None or isinstance(spec, Clock):
+        return spec
+    s = str(spec).lower()
+    if s in ("", "none"):
+        return None
+    if s in ("real", "wall"):
+        return WallClock()
+    return SimulatedClock(s)

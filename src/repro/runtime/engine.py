@@ -35,6 +35,7 @@ import numpy as np
 from repro.backends import ExecutionBackend, resolve_backend
 from repro.configs.base import AveragingConfig
 from repro.core import averaging as avg
+from repro.runtime.clock import Clock, Timeline
 from repro.strategies import CommunicationStrategy, make_strategy
 
 Pytree = Any
@@ -56,6 +57,10 @@ class TrainHistory:
     eval_steps: List[int] = field(default_factory=list)
     wall_s: float = 0.0
     n_syncs: int = 0
+    # telemetry (runtime/clock.py): Timeline.summary() of the run when the
+    # engine carried a clock — measured (wall) or simulated per-program
+    # compute/comm seconds and modeled bytes; None on un-clocked runs
+    timing: Optional[Dict[str, Any]] = None
     final_W: Optional[Pytree] = None
     final_opt: Optional[Pytree] = None
 
@@ -85,9 +90,14 @@ class Callback:
 
     def on_step_end(self, engine: "TrainerEngine", k: int,
                     metrics: Dict[str, Any]) -> None:
+        """On clocked runs ``metrics["timing"]`` carries the step program's
+        ``ProgramTiming`` (compute_s/comm_s/bytes — runtime/clock.py)."""
         pass
 
-    def on_sync(self, engine: "TrainerEngine", k: int, s_k: float) -> None:
+    def on_sync(self, engine: "TrainerEngine", k: int, s_k: float,
+                timing=None) -> None:
+        """``timing`` is the sync program's ``ProgramTiming`` on clocked
+        runs (None otherwise) — comm_s/bytes of this exchange."""
         pass
 
     def on_iteration_end(self, engine: "TrainerEngine", k: int,
@@ -152,7 +162,9 @@ class Checkpointer(Callback):
         # export checkpoints drop the (replica-stacked) optimizer state too
         opt = engine.opt_state if self.keep_replicas else None
         save_checkpoint(self.path, W, opt_state=opt, step=step,
-                        controller_state=strategy_state(engine.strategy))
+                        controller_state=strategy_state(engine.strategy),
+                        clock_state=(engine.clock.state_dict()
+                                     if engine.clock else None))
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +186,7 @@ class TrainerEngine:
                  avg_cfg: Optional[AveragingConfig] = None,
                  strategy: Optional[CommunicationStrategy] = None,
                  backend: Optional[ExecutionBackend] = None,
+                 clock: Optional[Clock] = None,
                  callbacks: Sequence[Callback] = (),
                  track_variance_every: int = 0,
                  seed: int = 0):
@@ -189,8 +202,16 @@ class TrainerEngine:
                 "pass one or the other (or matching configs)")
         self.backend = resolve_backend(backend)   # name, instance, or None
         self.backend.bind(n_replicas)
+        # telemetry: the clock rides the backend (every program the backend
+        # builds is a timed wrapper) and its Timeline rides the engine
+        self.clock = clock
+        self.timeline: Optional[Timeline] = clock.timeline if clock else None
+        # unconditional: clock=None must also *clear* any clock a previous
+        # engine left bound on a reused backend instance
+        self.backend.set_clock(clock)
         self.strategy = strategy
         self.strategy.compile(loss_fn, optimizer, backend=self.backend)
+        self.strategy.bind_clock(clock)
         self._optimizer = optimizer
         self._n_replicas = n_replicas
         self.loss_fn = loss_fn
@@ -212,7 +233,8 @@ class TrainerEngine:
 
     # ------------------------------------------------------------------
     def load_state(self, W: Pytree, opt_state: Optional[Pytree] = None,
-                   strategy_state: Optional[Dict] = None) -> None:
+                   strategy_state: Optional[Dict] = None,
+                   clock_state: Optional[Dict] = None) -> None:
         """Install checkpointed state (replica-stacked W) for resume.
         Export checkpoints (``Checkpointer(keep_replicas=False)``) lack the
         replica axis and are rejected.  State is re-``put`` through the
@@ -242,6 +264,11 @@ class TrainerEngine:
             # the run a fresh optimizer state (see docstring caveat)
             self.opt_state = self.backend.init_opt_state(
                 self._optimizer, self.W)
+        # clock before strategy: the restored controller's block-start is in
+        # clock coordinates, so the clock must already tick from the saved
+        # time when time-driven policies resume (mid-block schedules)
+        if clock_state is not None and self.clock is not None:
+            self.clock.load_state_dict(clock_state)
         if strategy_state is not None:
             from repro.checkpoint.io import restore_strategy
             restore_strategy(self.strategy, strategy_state)
@@ -263,21 +290,27 @@ class TrainerEngine:
         if not hist.lrs:
             hist.lr_start_step = start_step
         t0 = time.time()
+        tl = self.timeline
         for k in range(start_step, stop):
             lr = self.lr_fn(k)
             hist.lrs.append(lr)
             batch = self.data_fn(k)
             step_key = jax.random.fold_in(self._base_key, k)
             step_info: Dict[str, Any] = {}
+            if tl is not None:
+                tl.step = k          # dispatches below stamp this iteration
             for j, action in enumerate(self.strategy.actions(k)):
                 key = jax.random.fold_in(step_key, j)
                 self.W, self.opt_state, info = self.strategy.dispatch(
                     action, self.W, self.opt_state, batch, lr, key)
+                timing = tl.last if tl is not None else None
                 if "loss" in info:
                     step_info = info
                     loss_val = float(info["loss"])
                     hist.losses.append(loss_val)
                     self.strategy.observe_loss(k, loss_val)
+                    if timing is not None:
+                        info["timing"] = timing
                     for cb in self.callbacks:
                         cb.on_step_end(self, k, info)
                 if "s_k" in info:
@@ -287,13 +320,16 @@ class TrainerEngine:
                     hist.sync_steps.append(k)
                     hist.period_history.append(self.strategy.period)
                     for cb in self.callbacks:
-                        cb.on_sync(self, k, s_k)
+                        cb.on_sync(self, k, s_k, timing)
                 if info.get("inner_sync"):
                     hist.inner_sync_steps.append(k)
             for cb in self.callbacks:
                 cb.on_iteration_end(self, k, step_info)
         hist.wall_s += time.time() - t0
         hist.n_syncs = self.strategy.n_comm_events - self._comm_event_base
+        if tl is not None:
+            hist.timing = dict(tl.summary(), clock=self.clock.kind,
+                               sim_wall_s=self.clock.now())
         hist.final_W = self.W
         hist.final_opt = self.opt_state
         for cb in self.callbacks:

@@ -14,17 +14,35 @@ separation the strategy/backend split is for.
 """
 from __future__ import annotations
 
-from repro.core.controller import AdaCommController
+from repro.configs.base import AveragingConfig
+from repro.core.controller import AdaCommController, AdaCommTimeController
 from repro.strategies.base import register_strategy
 from repro.strategies.periodic import PeriodicAveragingStrategy
 
 
 @register_strategy
 class AdaCommStrategy(PeriodicAveragingStrategy):
-    """Periodic averaging on AdaComm's error-runtime-adaptive schedule."""
+    """Periodic averaging on AdaComm's error-runtime-adaptive schedule.
+
+    ``cfg.adacomm_mode`` picks the block definition: ``'iterations'``
+    (default — blocks of ``adacomm_interval`` iterations, bit-exact with
+    the PR-2/3 behavior) or ``'time'`` (the paper's wall-clock form —
+    blocks of ``adacomm_t0`` seconds on the engine's telemetry clock, with
+    straggler rescaling; see ``AdaCommTimeController``)."""
 
     name = "adacomm"
     controller_cls = AdaCommController
+
+    def __init__(self, cfg: AveragingConfig, total_steps: int, **kw):
+        if cfg.adacomm_mode == "time":
+            # instance attr shadows the class default before the base
+            # __init__ instantiates the controller
+            self.controller_cls = AdaCommTimeController
+        elif cfg.adacomm_mode != "iterations":
+            raise ValueError(
+                f"unknown adacomm_mode '{cfg.adacomm_mode}'; "
+                "use 'iterations' or 'time'")
+        super().__init__(cfg, total_steps, **kw)
 
     def observe_loss(self, k: int, loss: float) -> None:
         self.controller.observe_loss(k, loss)

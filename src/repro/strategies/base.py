@@ -98,6 +98,11 @@ class CommunicationStrategy:
         loss back for its history, so this costs nothing extra).  Drives
         loss-adaptive policies — AdaComm's error-runtime schedule."""
 
+    def bind_clock(self, clock) -> None:
+        """Hand the engine's telemetry clock (``runtime/clock.py``, may be
+        None) to time-driven policies — the wall-clock AdaComm controller
+        adapts per t0-second block of ``clock.now()``.  Base: ignore."""
+
     # ------------------------------------------------------------- telemetry
     @property
     def period(self) -> int:
@@ -116,6 +121,12 @@ class CommunicationStrategy:
         unless the strategy compresses)."""
         return ring_allreduce_bytes(n_params, n_nodes)
 
+    def comm_collective(self) -> str:
+        """Collective type of a sync event, for the per-collective latency
+        model (``comm_model.COLLECTIVE_HOPS``): ring all-reduce unless the
+        strategy's exchange is not ring-reducible."""
+        return "all_reduce"
+
     def comm_events_for(self, total_steps: int, n_syncs: int) -> int:
         """How many communication events a run of ``total_steps`` with
         ``n_syncs`` recorded syncs performed."""
@@ -125,7 +136,8 @@ class CommunicationStrategy:
                    n_syncs: int, bandwidth: float) -> CommStats:
         per = self.comm_bytes_per_sync(n_params, n_nodes)
         ev = self.comm_events_for(total_steps, n_syncs)
-        return CommStats(per, ev, comm_time(per, ev, n_nodes, bandwidth))
+        return CommStats(per, ev, comm_time(per, ev, n_nodes, bandwidth,
+                                            collective=self.comm_collective()))
 
     # ------------------------------------------------------------ checkpoint
     def state_dict(self) -> Dict[str, Any]:

@@ -66,6 +66,9 @@ class QSGDStrategy(CommunicationStrategy):
     def comm_bytes_per_sync(self, n_params: int, n_nodes: int) -> float:
         return qsgd_bytes_per_sync(self.cfg, n_params, n_nodes)
 
+    def comm_collective(self) -> str:
+        return "gather_bcast"       # not ring-reducible; latency unreduced
+
     def comm_events_for(self, total_steps: int, n_syncs: int) -> int:
         return total_steps
 
@@ -103,6 +106,9 @@ class QSGDPeriodicStrategy(PeriodicAveragingStrategy):
 
     def comm_bytes_per_sync(self, n_params: int, n_nodes: int) -> float:
         return qsgd_bytes_per_sync(self.cfg, n_params, n_nodes)
+
+    def comm_collective(self) -> str:
+        return "gather_bcast"
 
     # ------------------------------------------------------------ checkpoint
     # The anchor is the agreed value every later delta quantizes against —

@@ -284,6 +284,77 @@ def test_cross_placement_resume(setup8, vmap_baseline, tmp_path,
 
 
 # ---------------------------------------------------------------------------
+# Reduced-transformer family parity (ROADMAP item): one config per model
+# family under mesh+replica_tp vs the vmap baseline.  Too slow for the
+# per-PR suites — the nightly/dispatch `placements-transformer` CI job
+# opts in via PLACEMENTS_TRANSFORMER=1 (with 8 forced host devices).
+# ---------------------------------------------------------------------------
+
+TRANSFORMER_FAMILIES = [
+    ("dense", "olmo-1b"),
+    ("moe", "mixtral-8x22b"),
+    ("ssm", "xlstm-350m"),
+    ("hybrid", "jamba-1.5-large-398b"),
+    ("vlm", "qwen2-vl-2b"),
+    ("audio", "whisper-medium"),
+]
+_TF_STEPS, _TF_R, _TF_B, _TF_S = 6, 4, 2, 32
+
+
+def _family_engine(arch, backend):
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.data.pipeline import SyntheticTokens
+    from repro.launch.steps import make_loss_fn
+    from repro.models import model as M
+
+    run_cfg = get_config(arch)
+    cfg = reduced(run_cfg.model, max_seq_len=_TF_S)
+    data = SyntheticTokens(cfg.vocab_size, _TF_S, n_samples=64, seed=0)
+    base_fn = data.batches(n_replicas=_TF_R, per_replica_batch=_TF_B)
+    if cfg.encoder is not None:
+        # audio: deterministic per-step frame embeddings (post-frontend
+        # stub), identical across backends so parity is meaningful
+        def data_fn(k, _base=base_fn):
+            b = dict(_base(k))
+            rng = np.random.RandomState(1000 + k)
+            b["frames"] = jnp.asarray(0.1 * rng.randn(
+                _TF_R, _TF_B, cfg.encoder.n_frames,
+                cfg.d_model).astype("float32"))
+            return b
+    else:
+        data_fn = base_fn
+    if isinstance(backend, tuple):
+        # the transformer TP rules need the model config for base_spec
+        bk = make_backend(backend[0], placement=backend[1], model_cfg=cfg)
+    else:
+        bk = backend
+    return TrainerEngine(
+        loss_fn=make_loss_fn(cfg), optimizer=get_optimizer("momentum"),
+        params0=M.init_params(jax.random.PRNGKey(0), cfg),
+        n_replicas=_TF_R, data_fn=data_fn, lr_fn=lambda k: 0.01,
+        avg_cfg=AveragingConfig(method="adpsgd", p_init=2,
+                                warmup_full_sync_steps=2, k_sample_frac=0.5),
+        total_steps=_TF_STEPS, backend=bk)
+
+
+@pytest.mark.parametrize("family,arch", TRANSFORMER_FAMILIES,
+                         ids=[f for f, _ in TRANSFORMER_FAMILIES])
+def test_transformer_family_parity(family, arch):
+    if not os.environ.get("PLACEMENTS_TRANSFORMER"):
+        pytest.skip("nightly placements-transformer job "
+                    "(set PLACEMENTS_TRANSFORMER=1 to run)")
+    hv = _family_engine(arch, "vmap").run()
+    hm = _family_engine(arch, ("mesh", "replica_tp")).run()
+    assert hm.sync_steps == hv.sync_steps, (family, arch)
+    assert hm.period_history == hv.period_history
+    np.testing.assert_allclose(hm.losses, hv.losses, rtol=5e-4, atol=1e-5,
+                               err_msg=f"{family}/{arch}")
+    np.testing.assert_allclose(hm.s_k, hv.s_k, rtol=2e-3, atol=1e-5,
+                               err_msg=f"{family}/{arch}")
+
+
+# ---------------------------------------------------------------------------
 # Forced 8-device (4 data x 2 model) acceptance matrix — own interpreter
 # because the device count is fixed at first jax init
 # ---------------------------------------------------------------------------

@@ -1,0 +1,394 @@
+"""Telemetry subsystem tests (DESIGN.md §6): clocks, timed backends, the
+per-collective comm model, the wall-clock AdaComm controller, and the
+bench-regression gate's comparison logic.
+
+The invariants:
+
+* a bound clock never perturbs training — losses/schedules are
+  bit-identical to an un-clocked run (the SimulatedClock never blocks and
+  the WallClock only adds block_until_ready);
+* every dispatched program reports one ``(compute_s, comm_s, bytes)``
+  record whose bytes match the analytic ring model for the program's
+  collective (group-sized for ``inner_mean``, bits/32-scaled for
+  quantized exchanges);
+* the time-based AdaComm schedule is a pure function of simulated time, so
+  10 vs 100 Gbps produce *diverging* period trajectories (larger periods
+  when communication is expensive — the paper's behavior), straggler
+  slowdowns rescale the period by 1/sqrt(s), and a checkpoint/restore
+  continues the same t0-second block mid-block.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import AveragingConfig
+from repro.core.comm_model import (GBPS_10, GBPS_100, LATENCY_S,
+                                   ring_allreduce_bytes, comm_time)
+from repro.core.controller import AdaCommTimeController
+from repro.data.pipeline import SyntheticImages
+from repro.models.cnn import cnn_loss, init_cnn
+from repro.optim import get_optimizer, make_lr_schedule
+from repro.runtime.clock import (NetworkModel, SimulatedClock, WallClock,
+                                 make_clock, resolve_net)
+from repro.runtime.engine import Callback, TrainerEngine
+from repro.checkpoint.io import (load_checkpoint, save_checkpoint,
+                                 strategy_state)
+
+STEPS = 12
+REPLICAS = 4
+
+
+# ---------------------------------------------------------------------------
+# comm model: per-collective latency (the hierarchical-overcharge fix)
+# ---------------------------------------------------------------------------
+
+
+def test_comm_time_default_unchanged():
+    # legacy callers (no collective kwarg) keep the ring all-reduce pricing
+    b, n, bw = 1e6, 8, GBPS_100
+    assert comm_time(b, 3, n, bw) == pytest.approx(
+        3 * (b / bw + LATENCY_S * 2 * (n - 1)))
+
+
+def test_comm_time_per_collective_hops():
+    b, n, bw = 1e6, 8, GBPS_100
+    ar = comm_time(b, 1, n, bw, collective="all_reduce")
+    ag = comm_time(b, 1, n, bw, collective="all_gather")
+    gb = comm_time(b, 1, n, bw, collective="gather_bcast")
+    assert ag < ar                      # (n-1) hops vs 2(n-1)
+    assert gb == ar                     # latency NOT reduced (paper §IV)
+    with pytest.raises(ValueError, match="collective"):
+        comm_time(b, 1, n, bw, collective="ring_of_fire")
+
+
+def test_inner_mean_charged_for_group_not_world():
+    """A hierarchical inner sync prices a ring within one group: fewer
+    latency hops *and* fewer bytes than the full cross-replica ring —
+    the old unconditional 2(n-1) overcharged it."""
+    n_par, world, group, bw = 500_000, 8, 2, GBPS_10
+    inner = comm_time(ring_allreduce_bytes(n_par, group), 1, group, bw,
+                      collective="inner_mean")
+    cross = comm_time(ring_allreduce_bytes(n_par, world), 1, world, bw,
+                      collective="all_reduce")
+    assert inner < cross
+
+
+def test_resolve_net():
+    assert resolve_net("10gbps").bandwidth == GBPS_10
+    assert resolve_net("100gbps").bandwidth == GBPS_100
+    assert resolve_net("25gbps").bandwidth == pytest.approx(25e9 / 8)
+    nm = NetworkModel("x", 1e9, intra_bandwidth=5e9)
+    assert resolve_net(nm) is nm and nm.intra == 5e9
+    with pytest.raises(ValueError):
+        resolve_net("carrier-pigeon")
+    assert make_clock(None) is None and make_clock("none") is None
+    assert isinstance(make_clock("real"), WallClock)
+    assert isinstance(make_clock("10gbps"), SimulatedClock)
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: timed programs, timeline, callbacks
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup4():
+    data = SyntheticImages(n_samples=128, seed=0)
+    params0 = init_cnn(jax.random.PRNGKey(0), widths=(8, 16))
+    opt = get_optimizer("momentum")
+    lr_fn = make_lr_schedule("step", 0.05, STEPS, decay_steps=(8,))
+    return data, params0, opt, lr_fn
+
+
+def make_engine(setup4, method="adpsgd", clock=None, callbacks=(), **cfg_kw):
+    data, params0, opt, lr_fn = setup4
+    base = dict(method=method, p_init=2, p_const=4, k_sample_frac=0.25,
+                warmup_full_sync_steps=2, inner_period=2, adacomm_interval=4)
+    base.update(cfg_kw)
+    return TrainerEngine(
+        loss_fn=cnn_loss, optimizer=opt, params0=params0,
+        n_replicas=REPLICAS,
+        data_fn=data.batches(n_replicas=REPLICAS, per_replica_batch=4),
+        lr_fn=lr_fn, avg_cfg=AveragingConfig(**base), total_steps=STEPS,
+        clock=clock, callbacks=callbacks)
+
+
+def test_clock_does_not_perturb_training(setup4):
+    h0 = make_engine(setup4).run()
+    hs = make_engine(setup4, clock=SimulatedClock("10gbps")).run()
+    np.testing.assert_array_equal(h0.losses, hs.losses)
+    assert h0.sync_steps == hs.sync_steps
+    assert h0.timing is None and hs.timing is not None
+
+
+def test_simulated_timeline_is_deterministic(setup4):
+    t1 = make_engine(setup4, clock=SimulatedClock("10gbps")).run().timing
+    t2 = make_engine(setup4, clock=SimulatedClock("10gbps")).run().timing
+    assert t1 == t2                     # bit-reproducible on CPU CI
+    assert t1["comm_s"] > 0 and t1["compute_s"] > 0
+    # 10 vs 100 Gbps: same dispatches, same bytes, cheaper comm
+    t100 = make_engine(setup4, clock=SimulatedClock("100gbps")).run().timing
+    assert t100["bytes"] == t1["bytes"]
+    assert t100["comm_s"] < t1["comm_s"]
+    assert t100["compute_s"] == t1["compute_s"]
+
+
+def test_program_records_and_bytes(setup4):
+    _, params0, _, _ = setup4
+    n_par = sum(x.size for x in jax.tree_util.tree_leaves(params0))
+    clock = SimulatedClock("10gbps")
+    e = make_engine(setup4, clock=clock)
+    h = e.run()
+    by = h.timing["by_program"]
+    assert by["replica_step"]["calls"] == STEPS
+    assert by["all_mean"]["calls"] == h.n_syncs
+    assert by["replica_step"]["comm_s"] == 0.0       # collective-free
+    assert by["replica_step"]["bytes"] == 0.0
+    # sync bytes are the ring all-reduce of the per-replica param count
+    per_sync = by["all_mean"]["bytes"] / by["all_mean"]["calls"]
+    assert per_sync == pytest.approx(ring_allreduce_bytes(n_par, REPLICAS))
+    # records carry the engine iteration they belonged to
+    sync_records = [r for r in clock.timeline.records if r.name == "all_mean"]
+    assert [r.step for r in sync_records] == h.sync_steps
+
+
+def test_quantized_and_inner_programs_priced(setup4):
+    _, params0, _, _ = setup4
+    n_par = sum(x.size for x in jax.tree_util.tree_leaves(params0))
+    hq = make_engine(setup4, "qsgd", clock=SimulatedClock("10gbps"),
+                     qsgd_bits=8).run()
+    per = hq.timing["by_program"]["qsgd_step"]
+    assert per["bytes"] / per["calls"] == pytest.approx(
+        ring_allreduce_bytes(n_par, REPLICAS) / 4)       # 8/32 of the volume
+    hh = make_engine(setup4, "hier_adpsgd", clock=SimulatedClock("10gbps"),
+                     group_size=2).run()
+    inner = hh.timing["by_program"]["inner_mean"]
+    # inner syncs price the ring of the *group* (2), not the world (4)
+    assert inner["bytes"] / inner["calls"] == pytest.approx(
+        ring_allreduce_bytes(n_par, 2))
+    outer = hh.timing["by_program"]["all_mean"]
+    assert inner["comm_s"] / inner["calls"] < outer["comm_s"] / outer["calls"]
+
+
+def test_wall_clock_measures_and_rebases(setup4):
+    clock = WallClock()
+    h = make_engine(setup4, clock=clock).run()
+    t = h.timing
+    assert t["clock"] == "wall"
+    assert t["compute_s"] > 0 and t["comm_s"] > 0
+    assert len(clock.timeline.records) == t["n_records"]
+    # restore re-bases the epoch: now() continues from the saved time
+    w2 = WallClock()
+    w2.load_state_dict({"t": 123.0})
+    assert w2.now() >= 123.0
+
+
+class _SyncSpy(Callback):
+    def __init__(self):
+        self.sync_timings = []
+        self.step_timings = []
+
+    def on_step_end(self, engine, k, metrics):
+        self.step_timings.append(metrics.get("timing"))
+
+    def on_sync(self, engine, k, s_k, timing=None):
+        self.sync_timings.append(timing)
+
+
+def test_callbacks_receive_timing(setup4):
+    spy = _SyncSpy()
+    h = make_engine(setup4, clock=SimulatedClock("10gbps"),
+                    callbacks=(spy,)).run()
+    assert len(spy.sync_timings) == h.n_syncs
+    assert all(t is not None and t.name == "all_mean" and t.comm_s > 0
+               for t in spy.sync_timings)
+    assert all(t is not None and t.name == "replica_step"
+               for t in spy.step_timings)
+    # un-clocked runs pass None, not garbage
+    spy2 = _SyncSpy()
+    make_engine(setup4, callbacks=(spy2,)).run()
+    assert all(t is None for t in spy2.sync_timings)
+
+
+# ---------------------------------------------------------------------------
+# Wall-clock AdaComm: t0-second blocks, straggler rescaling, divergence
+# ---------------------------------------------------------------------------
+
+
+def _drive_time_controller(net, *, steps=400, straggler=1.0,
+                           nbytes=36e6, t0=0.03, tau0=16):
+    """Emulate the periodic dispatch loop against a SimulatedClock: one
+    step charge per iteration, one all-reduce charge per sync the
+    controller schedules, loss decaying in the *iteration* index — so the
+    period trajectory is a pure function of the simulated network."""
+    clock = SimulatedClock(net, step_compute_s=1e-3, straggler=straggler)
+    cfg = AveragingConfig(method="adacomm", p_init=tau0,
+                          adacomm_mode="time", adacomm_t0=t0)
+    ctrl = AdaCommTimeController(cfg, steps)
+    ctrl.bind_clock(clock)
+    trace = []                          # (sim time, period) per iteration
+    for k in range(steps):
+        clock.measure("replica_step", lambda: None, (), is_step=True)
+        if ctrl.sync_now(k):
+            clock.measure("all_mean", lambda: None, (), is_step=False,
+                          comm_bytes=nbytes, collective="all_reduce",
+                          n_nodes=4)
+        ctrl.observe_loss(k, math.exp(-k / 40))
+        trace.append((clock.now(), ctrl.period))
+    return trace, ctrl
+
+
+def _period_at(trace, t):
+    p = trace[0][1]
+    for tt, pp in trace:
+        if tt > t:
+            break
+        p = pp
+    return p
+
+
+def test_adacomm_time_periods_diverge_with_bandwidth():
+    """The paper's trend: at the same *wall-clock*, the 10 Gbps run has
+    completed fewer iterations (syncs cost more), sits higher on the loss
+    curve, and therefore holds a larger period than the 100 Gbps run —
+    communication is scheduled less often exactly when it is expensive."""
+    tr10, _ = _drive_time_controller("10gbps")
+    tr100, _ = _drive_time_controller("100gbps")
+    assert [p for _, p in tr10] != [p for _, p in tr100]
+    probes = [0.09, 0.15, 0.24]
+    p10 = [_period_at(tr10, t) for t in probes]
+    p100 = [_period_at(tr100, t) for t in probes]
+    assert all(a >= b for a, b in zip(p10, p100))
+    assert any(a > b for a, b in zip(p10, p100))
+    # both adapted away from tau0 (the trajectories are live, not stuck)
+    assert p10[-1] < 16 and p100[-1] < 16
+
+
+def test_adacomm_time_straggler_rescaling():
+    """tau* ∝ sqrt(t_comm/(s·t_step)): a straggler slowdown s shrinks the
+    loss-derived period by sqrt(s) (controller docstring).  Tested on the
+    update rule directly — f == f0 isolates the straggler term."""
+    cfg = AveragingConfig(method="adacomm", p_init=8, adacomm_mode="time",
+                          adacomm_t0=0.01)
+    for s, expect in ((1.0, 8), (4.0, 4), (16.0, 2)):
+        clock = SimulatedClock("100gbps", step_compute_s=1e-3, straggler=s)
+        ctrl = AdaCommTimeController(cfg, 100)
+        ctrl.bind_clock(clock)
+        ctrl.f0 = 1.0                   # calibration done; ratio will be 1
+        ctrl._block_start = 0.0
+        for _ in range(30):             # advance well past t0
+            clock.measure("replica_step", lambda: None, (), is_step=True)
+        ctrl.observe_loss(0, 1.0)
+        assert ctrl.period == expect    # ceil(8 / sqrt(s))
+    with pytest.raises(ValueError, match="straggler"):
+        SimulatedClock("100gbps", straggler=0.5)
+
+
+def test_adacomm_iteration_mode_unaffected_by_clock(setup4):
+    """The PR-2/3 iteration-counted AdaComm stays bit-exact whether or not
+    a clock is bound (parity guarantee for the existing tests/benches)."""
+    h0 = make_engine(setup4, "adacomm").run()
+    hc = make_engine(setup4, "adacomm",
+                     clock=SimulatedClock("10gbps")).run()
+    assert h0.sync_steps == hc.sync_steps
+    assert h0.period_history == hc.period_history
+    np.testing.assert_array_equal(h0.losses, hc.losses)
+
+
+def test_adacomm_time_needs_clock(setup4):
+    with pytest.raises(ValueError, match="adacomm_mode='time'"):
+        make_engine(setup4, "adacomm", adacomm_mode="time")
+    with pytest.raises(ValueError, match="adacomm_mode"):
+        make_engine(setup4, "adacomm", adacomm_mode="sundial",
+                    clock=SimulatedClock("10gbps"))
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint/resume: the time-based schedule continues mid-block
+# ---------------------------------------------------------------------------
+
+
+def _time_engine(setup4, clock):
+    # t0 ~3.4 iterations of simulated time, so block boundaries land at
+    # non-checkpoint steps: the resumed run must continue the interrupted
+    # block, not restart it
+    return make_engine(setup4, "adacomm", clock=clock,
+                       adacomm_mode="time", adacomm_t0=0.017, p_init=2)
+
+
+def test_adacomm_time_checkpoint_resume_mid_block(setup4, tmp_path):
+    full = _time_engine(setup4, SimulatedClock("10gbps"))
+    h_full = full.run()
+    assert h_full.period_history        # the schedule actually adapted
+
+    half = _time_engine(setup4, SimulatedClock("10gbps"))
+    half.run(num_steps=STEPS // 2)
+    path = str(tmp_path / "tele")
+    save_checkpoint(path, half.W, opt_state=half.opt_state,
+                    step=STEPS // 2,
+                    controller_state=strategy_state(half.strategy),
+                    clock_state=half.clock.state_dict())
+
+    clock2 = SimulatedClock("10gbps")
+    resumed = _time_engine(setup4, clock2)
+    W, opt_state, meta = load_checkpoint(path)
+    assert meta["clock"]["kind"] == "sim"
+    resumed.load_state(W, opt_state, strategy_state=meta["controller"],
+                       clock_state=meta["clock"])
+    # the clock resumed from the saved coordinates, not zero
+    assert clock2.now() == pytest.approx(half.clock.now())
+    h_res = resumed.run(start_step=STEPS // 2)
+
+    tail = [s for s in h_full.sync_steps if s >= STEPS // 2]
+    assert h_res.sync_steps == tail
+    if tail:
+        assert h_res.period_history == h_full.period_history[-len(tail):]
+    np.testing.assert_allclose(h_res.losses, h_full.losses[STEPS // 2:],
+                               rtol=1e-6)
+    # and the resumed simulated time line ends where the full run's did
+    assert clock2.now() == pytest.approx(full.clock.now(), rel=1e-9)
+
+
+def test_clock_state_rides_checkpoint_io(tmp_path):
+    path = str(tmp_path / "clk")
+    save_checkpoint(path, {"w": np.zeros(3)},
+                    clock_state={"kind": "sim", "t": 1.25, "net": "10gbps"})
+    _, _, meta = load_checkpoint(path)
+    assert meta["clock"] == {"kind": "sim", "t": 1.25, "net": "10gbps"}
+    # and absent when not saved
+    save_checkpoint(path, {"w": np.zeros(3)})
+    _, _, meta = load_checkpoint(path)
+    assert "clock" not in meta
+
+
+# ---------------------------------------------------------------------------
+# Bench-regression gate comparison logic
+# ---------------------------------------------------------------------------
+
+
+def _bench_doc(wall=0.5, loss=2.30, syncs=12):
+    return {"strategies": {"adpsgd": {"timed": {"10gbps": {
+        "sim_wall_s": wall, "final_loss": loss, "n_syncs": syncs}}}}}
+
+
+def test_check_regression_compare():
+    from benchmarks.check_regression import compare
+    base = _bench_doc()
+    assert compare(base, _bench_doc(), loss_tol=.05, time_tol=.10) == []
+    # improvements never fail
+    assert compare(base, _bench_doc(wall=0.4, loss=2.0),
+                   loss_tol=.05, time_tol=.10) == []
+    # wall-clock regression beyond tolerance fails
+    msgs = compare(base, _bench_doc(wall=0.6), loss_tol=.05, time_tol=.10)
+    assert any("sim_wall_s" in m for m in msgs)
+    # loss regression fails
+    msgs = compare(base, _bench_doc(loss=2.6), loss_tol=.05, time_tol=.10)
+    assert any("final_loss" in m for m in msgs)
+    # schedule drift is reported
+    msgs = compare(base, _bench_doc(syncs=13), loss_tol=.05, time_tol=.10)
+    assert any("n_syncs" in m for m in msgs)
+    # a strategy missing from the fresh run is a coverage regression
+    msgs = compare(base, {"strategies": {}}, loss_tol=.05, time_tol=.10)
+    assert any("missing" in m for m in msgs)
