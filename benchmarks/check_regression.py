@@ -19,9 +19,18 @@ machine-dependent and only reported, never gated):
 * ``n_syncs``     — the sync schedule itself is deterministic; any drift
   is reported (gated with the time tolerance via sim_wall_s anyway, but a
   count change is the clearest diagnostic).
+* ``wire_bytes``  — per-program modeled wire bytes per invocation, derived
+  from the ``CollectiveOp`` descriptors (``backends/ops.py``) and therefore
+  exactly deterministic: any mismatch means the wire format of an exchange
+  changed (e.g. a quantized path silently moving f32 again) and is gated
+  with **zero** tolerance.
 
-Strategies present only in the fresh file are fine (new code); strategies
-*missing* from the fresh file fail (coverage regression).  Exit code 0 =
+Column-set drift is handled asymmetrically: *added* columns in either file
+are tolerated (new metrics land without invalidating the committed
+baseline — the gate compares only the columns both files carry), while a
+gated column that the baseline has and the fresh run lost is reported as a
+coverage regression.  Strategies present only in the fresh file are fine
+(new code); strategies *missing* from the fresh file fail.  Exit code 0 =
 pass, 1 = regression (CI fails the job and uploads the fresh JSON as an
 artifact for inspection).
 """
@@ -54,20 +63,47 @@ def compare(base: Dict, fresh: Dict, *, loss_tol: float,
             if got is None:
                 problems.append(f"{name}/{net}: missing from fresh baseline")
                 continue
-            lb, lf = cols["final_loss"], got["final_loss"]
-            if lf > lb * (1 + loss_tol):
-                problems.append(
-                    f"{name}/{net}: final_loss {lf} vs baseline {lb} "
-                    f"(> +{loss_tol:.0%})")
-            wb, wf = cols["sim_wall_s"], got["sim_wall_s"]
-            if wf > wb * (1 + time_tol):
-                problems.append(
-                    f"{name}/{net}: sim_wall_s {wf} vs baseline {wb} "
-                    f"(> +{time_tol:.0%})")
-            if got["n_syncs"] != cols["n_syncs"]:
+            # compare only the columns both files carry: added columns on
+            # either side are new metrics, not regressions — but a *gated*
+            # column the fresh run lost is a coverage regression
+            for col in ("final_loss", "sim_wall_s", "n_syncs", "wire_bytes"):
+                if col in cols and col not in got:
+                    problems.append(
+                        f"{name}/{net}: gated column '{col}' missing from "
+                        "fresh baseline (coverage regression)")
+            if "final_loss" in cols and "final_loss" in got:
+                lb, lf = cols["final_loss"], got["final_loss"]
+                if lf > lb * (1 + loss_tol):
+                    problems.append(
+                        f"{name}/{net}: final_loss {lf} vs baseline {lb} "
+                        f"(> +{loss_tol:.0%})")
+            if "sim_wall_s" in cols and "sim_wall_s" in got:
+                wb, wf = cols["sim_wall_s"], got["sim_wall_s"]
+                if wf > wb * (1 + time_tol):
+                    problems.append(
+                        f"{name}/{net}: sim_wall_s {wf} vs baseline {wb} "
+                        f"(> +{time_tol:.0%})")
+            if "n_syncs" in cols and "n_syncs" in got \
+                    and got["n_syncs"] != cols["n_syncs"]:
                 problems.append(
                     f"{name}/{net}: n_syncs {got['n_syncs']} vs baseline "
                     f"{cols['n_syncs']} (schedule drift)")
+            # wire bytes derive deterministically from the op descriptors:
+            # exact equality, per program — and every baseline program
+            # must still appear (a program whose bytes silently drop to 0
+            # vanishes from the fresh dict, which is itself the drift)
+            if "wire_bytes" in cols and "wire_bytes" in got:
+                for prog in sorted(cols["wire_bytes"]):
+                    if prog not in got["wire_bytes"]:
+                        problems.append(
+                            f"{name}/{net}: wire_bytes[{prog}] missing "
+                            "from fresh baseline (program stopped moving "
+                            "bytes or was renamed — wire-format drift)")
+                    elif got["wire_bytes"][prog] != cols["wire_bytes"][prog]:
+                        problems.append(
+                            f"{name}/{net}: wire_bytes[{prog}] "
+                            f"{got['wire_bytes'][prog]} vs baseline "
+                            f"{cols['wire_bytes'][prog]} (wire-format drift)")
     return problems
 
 

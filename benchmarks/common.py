@@ -6,10 +6,7 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Dict
-
 import jax
-import numpy as np
 
 from repro.configs import AveragingConfig
 from repro.data.pipeline import SyntheticImages

@@ -26,6 +26,12 @@ Two kinds of columns:
   offline ``modeled_comm_s`` estimate — and they are bit-reproducible on
   CPU CI.  ``speedup_vs_fullsgd`` is the paper's Fig 4c/5c/6 statistic;
   the ADPSGD speedup must be larger at 10 Gbps than at 100 Gbps.
+  ``wire_bytes`` breaks the volume down per program and per invocation,
+  priced from the ``CollectiveOp`` descriptors the backends lowered
+  (``backends/ops.py``) — the byte-true quantized exchange shows up here
+  at ~bits/32 of the f32 volume plus the per-tensor norm side-channel,
+  and ``check_regression.py`` gates these columns with zero tolerance
+  (any drift means a wire format changed).
 """
 from __future__ import annotations
 
@@ -106,11 +112,17 @@ def timed_baseline(net: str, steps: int = STEPS) -> Dict[str, Dict]:
     for name in available_strategies():
         h = C.run_method(name, steps=steps, inner_period=2, net=net)
         t = h.timing
+        # measured wire bytes per invocation, per program — derived from
+        # the CollectiveOp descriptors, so exactly deterministic (gated
+        # with zero tolerance by check_regression.py)
+        wire = {p: round(v["bytes"] / v["calls"], 1)
+                for p, v in sorted(t["by_program"].items()) if v["bytes"]}
         cols[name] = {
             "sim_wall_s": round(t["sim_wall_s"], 6),
             "sim_compute_s": round(t["compute_s"], 6),
             "sim_comm_s": round(t["comm_s"], 6),
             "comm_bytes_per_node": round(t["bytes"], 1),
+            "wire_bytes": wire,
             "n_syncs": h.n_syncs,
             "final_loss": round(float(np.mean(h.losses[-8:])), 4),
         }

@@ -13,10 +13,7 @@ import json
 import os
 from typing import Dict, List, Optional
 
-import jax
-
 from repro.configs import INPUT_SHAPES, get_config
-from repro.core.comm_model import PEAK_FLOPS_BF16
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
                           "experiments", "dryrun")

@@ -2,11 +2,15 @@
 
 Importing this package registers the built-in backends: ``vmap`` (host
 device, PR-1 behavior, bit-exact) and ``mesh`` (``shard_map`` over a real
-device mesh, replica axis sharded over ``data``/``pod``).
+device mesh, replica axis sharded over ``data``/``pod``).  The
+communication layer's vocabulary — the ``CollectiveOp`` descriptors
+strategies emit and backends lower — lives in ``backends/ops.py``
+(DESIGN.md §8).
 """
 from repro.backends.base import (  # noqa: F401
     ExecutionBackend, available_backends, get_backend_cls, make_backend,
     register_backend, resolve_backend,
 )
+from repro.backends.ops import CollectiveOp, InFlightOp, WireFormat  # noqa: F401
 from repro.backends.vmap import VmapBackend  # noqa: F401
 from repro.backends.mesh import MeshBackend  # noqa: F401

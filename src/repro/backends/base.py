@@ -10,25 +10,26 @@ policy against any topology:
   built with ``vmap`` + ``jnp.mean`` (the PR-1 behavior, bit-exact).
 * ``MeshBackend``  — the replica axis sharded over the ``data``/``pod`` axes
   of a real ``jax.sharding.Mesh`` (``launch/mesh.py``), programs built with
-  ``shard_map`` and syncs lowered to ``jax.lax.pmean``/``psum`` on the
-  replica mesh axes.
+  ``shard_map`` and syncs lowered to real collectives.
 
-Strategies never hand-roll ``vmap`` or ``jnp.mean(axis=0)``; they ask the
-backend for pre-built device programs:
+Strategies never hand-roll ``vmap`` or ``jnp.mean(axis=0)``; they emit
+**``CollectiveOp`` descriptors** (``backends/ops.py``) and ask the backend
+to lower them to compiled device programs:
 
-* ``replica_step(loss_fn, optimizer)`` — independent local SGD step per
-  replica, **zero replica-axis collectives** (Algorithm 1 lines 3-4).
-* ``all_mean(sync_momentum=...)``      — the parameter average plus the
-  paper's variance probe S_k (Algorithm 2 lines 10-11); the only program
-  with a full replica-axis collective.
-* ``quantized_all_mean(bits)``         — QSGD-quantized delta-from-anchor
-  exchange (qsgd_periodic composition).
-* ``inner_mean(group_size)``           — in-group (in-pod) partial average
-  for the hierarchical strategy.
-* ``mean_delta()`` / ``apply_delta()`` — deferred correction pair for
-  DaSGD-style delayed averaging.
-* ``full_step`` / ``qsgd_step``        — every-step gradient-averaging
-  baselines (FULLSGD, QSGD).
+    program = backend.lower(op, loss_fn=..., optimizer=...)
+
+The descriptor carries the collective kind, wire format, group, and overlap
+hint; lowering resolves ``op.name`` to the backend's ``_lower_<name>``
+builder and wraps the compiled program so every invocation is priced *from
+the descriptor itself* (``op.wire_bytes``) into the bound telemetry clock —
+the old hand-synchronized ``PROGRAM_COMM`` table is gone.  Ops with
+``overlap=True`` dispatch asynchronously and return an ``InFlightOp``
+handle fetched later (DaSGD's delayed correction).
+
+The named convenience builders (``replica_step`` / ``all_mean`` /
+``inner_mean`` / ``quantized_all_mean`` / ``mean_delta`` / ``apply_delta``
+/ ``full_step`` / ``qsgd_step`` / ``opt_mean``) remain as thin sugar over
+``lower(<canonical op>)`` for tests and benchmarks.
 
 Placement hooks (``put_params`` / ``put_opt`` / ``put_replicated`` /
 ``init_opt_state``) let the engine and the checkpoint layer stay
@@ -45,41 +46,26 @@ from typing import Any, Callable, Dict, List, Optional, Type
 
 import jax
 
+from repro.backends import ops as collective_ops
+from repro.backends.ops import CollectiveOp, InFlightOp
 from repro.core import averaging as avg
-from repro.core.comm_model import ring_allreduce_bytes
 
 Pytree = Any
 
-# Communication shape of every backend program, keyed by program name:
-# (is_step, collective, bytes_scale).  ``is_step`` programs charge the
-# per-step compute cost on a SimulatedClock; ``collective`` (None = no
-# cross-replica exchange) and ``bytes_scale`` (x the full-precision ring
-# all-reduce volume) price the exchange -- quantized programs move
-# ``bits/32`` of the volume as a gather+broadcast (latency NOT reduced,
-# paper §IV), ``inner_mean`` prices a ring *within one group* (the clock
-# receives the group size, not the world size).  See runtime/clock.py and
-# core/comm_model.COLLECTIVE_HOPS.
-PROGRAM_COMM: Dict[str, tuple] = {
-    "replica_step": (True, None, 0.0),
-    "full_step": (True, "all_reduce", 1.0),
-    "qsgd_step": (True, "gather_bcast", None),      # None -> bits/32
-    "all_mean": (False, "all_reduce", 1.0),
-    "opt_mean": (False, "all_reduce", 1.0),
-    "quantized_all_mean": (False, "gather_bcast", None),
-    "inner_mean": (False, "inner_mean", 1.0),
-    "mean_delta": (False, "all_reduce", 1.0),
-    "apply_delta": (False, None, 0.0),              # collective-free add
-}
-
 
 class ExecutionBackend:
-    """Base class; concrete backends override placement + program builders.
+    """Base class; concrete backends override placement + ``_lower_*``
+    program builders.
 
     ``use_kernel`` selects the fused Pallas mean+sqdev kernel inside
-    ``all_mean`` where the backend supports it: ``True``/``False`` force it,
-    ``None`` (default) enables it only where profitable — on TPU, where the
-    Mosaic kernel fuses the two passes; on CPU interpret-mode it loses badly
-    (see ``benchmarks/kernel_bench.py``).
+    ``all_mean`` where the backend supports it: ``True``/``False`` force
+    it, ``None`` (default) enables it only where profitable — on TPU; on
+    CPU interpret-mode it loses badly (see ``benchmarks/kernel_bench.py``).
+    The QSGD *quantization* kernels are deliberately NOT governed by this
+    flag: their routing is platform-keyed (TPU -> Pallas, else reference
+    math) identically on every backend, because the byte-true exchange's
+    cross-backend bit-match requires all backends to round the same way
+    (see ``_lower_quantized_all_mean`` on vmap/mesh).
     """
 
     name = "base"
@@ -105,42 +91,114 @@ class ExecutionBackend:
 
     # ------------------------------------------------------------ telemetry
     def set_clock(self, clock) -> None:
-        """Bind a ``runtime/clock.py`` Clock.  Every program built by this
+        """Bind a ``runtime/clock.py`` Clock.  Every program lowered by this
         backend is wrapped by ``timed``; the wrapper consults ``self.clock``
         at call time, so binding before or after compilation both work and
         ``None`` (the default) keeps dispatch entirely un-instrumented."""
         self.clock = clock
 
-    def timed(self, name: str, fn: Callable, *, bits: Optional[int] = None,
-              group_size: Optional[int] = None) -> Callable:
+    def timed(self, op: CollectiveOp, fn: Callable) -> Callable:
         """Wrap a compiled program so each invocation reports one
         ``(compute_s, comm_s, bytes)`` record into the bound clock's
-        ``Timeline``.  The communication shape comes from ``PROGRAM_COMM``;
-        bytes are computed per invocation from the stacked operand (its
-        leaf sizes / n_replicas = per-replica parameter count), so one
-        wrapper serves every shape the program is dispatched with."""
-        is_step, collective, scale = PROGRAM_COMM[name]
-        if scale is None:
-            scale = (bits or 32) / 32.0
+        ``Timeline``.  The communication shape comes solely from the op
+        descriptor: bytes are ``op.wire_bytes`` of the per-replica
+        parameter count (read off the stacked operand per invocation, so
+        one wrapper serves every shape), the collective kind and group
+        ride the op, and ``overlap=True`` ops dispatch asynchronously —
+        the wrapper returns an ``InFlightOp`` whose ``fetch()`` settles
+        the exchange with the clock later."""
 
         def wrapped(*args):
             clock = self.clock
             if clock is None:
-                return fn(*args)
-            nbytes, n = 0.0, self.n_replicas or 1
-            if collective is not None:
-                if name == "inner_mean" and group_size:
-                    n = int(group_size)
-                tree = args[0]
-                n_params = sum(
-                    x.size for x in jax.tree_util.tree_leaves(tree))
-                n_params //= max(1, self.n_replicas or 1)
-                nbytes = ring_allreduce_bytes(n_params, n) * scale
-            return clock.measure(name, fn, args, is_step=is_step,
-                                 comm_bytes=nbytes, collective=collective,
+                out = fn(*args)
+                return InFlightOp(op, out) if op.overlap else out
+            n = self.n_replicas or 1
+            nbytes = 0.0
+            if op.collective is not None:
+                if op.group:
+                    n = int(op.group)
+                leaves = jax.tree_util.tree_leaves(args[0])
+                n_params = (sum(x.size for x in leaves)
+                            // max(1, self.n_replicas or 1))
+                nbytes = op.wire_bytes(n_params, n, n_tensors=len(leaves))
+            if op.overlap:
+                out, rec = clock.dispatch_async(
+                    op.name, fn, args, comm_bytes=nbytes,
+                    collective=op.collective, n_nodes=n)
+                return InFlightOp(op, out, clock, rec)
+            return clock.measure(op.name, fn, args, is_step=op.is_step,
+                                 comm_bytes=nbytes, collective=op.collective,
                                  n_nodes=n)
 
         return wrapped
+
+    # ------------------------------------------------------------- lowering
+    def lower(self, op: CollectiveOp, **builder_kw) -> Callable:
+        """Lower one ``CollectiveOp`` descriptor to a compiled, timed
+        program.  ``op.name`` resolves to this backend's ``_lower_<name>``
+        builder; parameters the op itself carries (wire bits, group size,
+        overlap) are read off the descriptor, anything host-side (loss_fn,
+        optimizer, sync_momentum) arrives as builder kwargs."""
+        build = getattr(self, f"_lower_{op.name}", None)
+        if build is None:
+            raise KeyError(
+                f"backend '{self.name}' cannot lower op '{op.name}'")
+        return self.timed(op, build(op, **builder_kw))
+
+    # ---------------------------------------------- named-op sugar
+    # Thin wrappers over lower(<canonical op>) — tests and benchmarks call
+    # these; strategies emit the descriptors directly.
+
+    def replica_step(self, loss_fn, optimizer) -> Callable:
+        """(W, opt_state, batch, lr) -> (W, opt_state, metrics); no
+        replica-axis collectives."""
+        return self.lower(collective_ops.replica_step_op(),
+                          loss_fn=loss_fn, optimizer=optimizer)
+
+    def full_step(self, loss_fn, optimizer) -> Callable:
+        """(W, opt_state, batch, lr) -> (W, opt_state, metrics); gradients
+        all-reduced every call (FULLSGD)."""
+        return self.lower(collective_ops.full_step_op(),
+                          loss_fn=loss_fn, optimizer=optimizer)
+
+    def qsgd_step(self, loss_fn, optimizer, bits: int) -> Callable:
+        """(W, opt_state, batch, lr, key) -> (W, opt_state, metrics);
+        quantized gradient exchange every call (QSGD)."""
+        return self.lower(collective_ops.qsgd_step_op(bits),
+                          loss_fn=loss_fn, optimizer=optimizer)
+
+    def all_mean(self, *, sync_momentum: bool = False) -> Callable:
+        """(W, opt_state) -> (W, opt_state, s_k): the replica average and
+        the paper's variance probe."""
+        return self.lower(collective_ops.all_mean_op(),
+                          sync_momentum=sync_momentum)
+
+    def inner_mean(self, group_size: int) -> Callable:
+        """(W) -> W averaged within contiguous replica groups of
+        ``group_size`` (hierarchical in-pod sync)."""
+        return self.lower(collective_ops.inner_mean_op(group_size))
+
+    def quantized_all_mean(self, bits: int) -> Callable:
+        """(W, anchor, key) -> (W, new_anchor, s_k): byte-true QSGD deltas
+        from the full-precision anchor — int8 levels + norms on the wire,
+        dequantized at the receiver, averaged and re-applied."""
+        return self.lower(collective_ops.quantized_all_mean_op(bits))
+
+    def opt_mean(self) -> Callable:
+        """(opt_state) -> opt_state averaged across replicas."""
+        return self.lower(collective_ops.opt_mean_op())
+
+    def mean_delta(self, *, overlap: bool = False) -> Callable:
+        """(W) -> (delta, s_k) with ``delta_i = mean(W) - W_i`` (stacked):
+        the correction DaSGD applies ``delay`` steps later.  With
+        ``overlap=True`` the call returns an ``InFlightOp`` immediately."""
+        return self.lower(collective_ops.mean_delta_op(overlap=overlap))
+
+    def apply_delta(self) -> Callable:
+        """(W, delta) -> W + delta, elementwise (no collectives — the
+        collective already happened in ``mean_delta``)."""
+        return self.lower(collective_ops.apply_delta_op())
 
     # ------------------------------------------------------------ placement
     def put_params(self, W: Pytree) -> Pytree:
@@ -177,61 +235,21 @@ class ExecutionBackend:
         config/heuristic choice."""
         return None
 
-    # ------------------------------------------------- program builders
-    # Every builder returns a compiled callable; signatures mirror the
-    # core/averaging.py programs so VmapBackend is a thin wrapper.
+    # ------------------------------------------------- shared lowerings
+    def _lower_apply_delta(self, op: CollectiveOp):
+        """Elementwise add, shared by every backend.  Buffers are donated
+        where donation is real (TPU/GPU): the pre-correction W and the
+        fetched delta are both dead after the add, so the overlap window
+        never holds a third parameter-sized buffer."""
+        import jax.numpy as jnp
 
-    def replica_step(self, loss_fn, optimizer) -> Callable:
-        """(W, opt_state, batch, lr) -> (W, opt_state, metrics); no
-        replica-axis collectives."""
-        raise NotImplementedError
+        def apply(W, delta):
+            return jax.tree_util.tree_map(
+                lambda w, d: (w.astype(jnp.float32) + d).astype(w.dtype),
+                W, delta)
 
-    def full_step(self, loss_fn, optimizer) -> Callable:
-        """(W, opt_state, batch, lr) -> (W, opt_state, metrics); gradients
-        all-reduced every call (FULLSGD)."""
-        raise NotImplementedError
-
-    def qsgd_step(self, loss_fn, optimizer, bits: int) -> Callable:
-        """(W, opt_state, batch, lr, key) -> (W, opt_state, metrics);
-        quantized gradient exchange every call (QSGD)."""
-        raise NotImplementedError
-
-    def all_mean(self, *, sync_momentum: bool = False) -> Callable:
-        """(W, opt_state) -> (W, opt_state, s_k): the replica average and
-        the paper's variance probe."""
-        raise NotImplementedError
-
-    def inner_mean(self, group_size: int) -> Callable:
-        """(W) -> W averaged within contiguous replica groups of
-        ``group_size`` (hierarchical in-pod sync)."""
-        raise NotImplementedError
-
-    def quantized_all_mean(self, bits: int) -> Callable:
-        """(W, anchor, key) -> (W, new_anchor, s_k): QSGD-quantized deltas
-        from the full-precision anchor, averaged and re-applied."""
-        raise NotImplementedError
-
-    def opt_mean(self) -> Callable:
-        """(opt_state) -> opt_state averaged across replicas."""
-        raise NotImplementedError
-
-    def mean_delta(self) -> Callable:
-        """(W) -> (delta, s_k) with ``delta_i = mean(W) - W_i`` (stacked):
-        the correction DaSGD applies ``delay`` steps later."""
-        raise NotImplementedError
-
-    def apply_delta(self) -> Callable:
-        """(W, delta) -> W + delta, elementwise (no collectives — the
-        collective already happened in ``mean_delta``)."""
-        if not hasattr(self, "_apply_delta_fn"):
-            import jax.numpy as jnp
-
-            def apply(W, delta):
-                return jax.tree_util.tree_map(
-                    lambda w, d: (w.astype(jnp.float32) + d).astype(w.dtype),
-                    W, delta)
-            self._apply_delta_fn = jax.jit(apply)
-        return self.timed("apply_delta", self._apply_delta_fn)
+        donate = (0, 1) if jax.default_backend() in ("tpu", "gpu") else ()
+        return jax.jit(apply, donate_argnums=donate)
 
 
 # ---------------------------------------------------------------------------

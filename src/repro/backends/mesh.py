@@ -214,9 +214,16 @@ class MeshBackend(ExecutionBackend):
             fn = self._cache[key] = build()
         return fn
 
-    def _shmap(self, chunk, in_specs, out_specs, out_shardings=None):
+    def _shmap(self, chunk, in_specs, out_specs, out_shardings=None, *,
+               auto=None):
+        """``auto=None`` takes the placement's default (partial-manual with
+        GSPMD owning 'model' under replica_tp); pass ``frozenset()`` to
+        force a fully-manual region — required where the body carries an
+        explicit gather collective, which XLA's partitioner rejects inside
+        manual subgroups (same limitation family as PartitionId)."""
         fn = shard_map(chunk, mesh=self.mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_rep=False, auto=self._auto)
+                       out_specs=out_specs, check_rep=False,
+                       auto=self._auto if auto is None else auto)
         if out_shardings is not None:
             return jax.jit(fn, out_shardings=out_shardings)
         return jax.jit(fn)
@@ -266,8 +273,11 @@ class MeshBackend(ExecutionBackend):
             lambda m: _tm(lambda x: jnp.mean(x, axis=0), m)))
         return fn(metrics)
 
-    # ------------------------------------------------------------- programs
-    def replica_step(self, loss_fn, optimizer):
+    # ------------------------------------------------------------ lowerings
+    # resolved by ExecutionBackend.lower(op) and wrapped by timed(op, ...):
+    # with a bound clock each invocation is priced from the op descriptor
+    # (backends/ops.py) — the builders only decide *how* the exchange runs
+    def _lower_replica_step(self, op, *, loss_fn, optimizer):
         one_replica = avg.make_replica_step(loss_fn, optimizer)
 
         def chunk(Wc, oc, bc, lr):
@@ -288,9 +298,9 @@ class MeshBackend(ExecutionBackend):
             W, opt_state, m = fn(W, opt_state, batch, lr)
             return W, opt_state, self._metrics_mean(m)
 
-        return self.timed("replica_step", prog)
+        return prog
 
-    def full_step(self, loss_fn, optimizer):
+    def _lower_full_step(self, op, *, loss_fn, optimizer):
         grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
         def chunk(Wc, oc, bc, lr):
@@ -314,9 +324,10 @@ class MeshBackend(ExecutionBackend):
                     lambda: self._opt_shardings(opt_state, W), None)))
             return fn(W, opt_state, batch, lr)
 
-        return self.timed("full_step", prog)
+        return prog
 
-    def qsgd_step(self, loss_fn, optimizer, bits):
+    def _lower_qsgd_step(self, op, *, loss_fn, optimizer):
+        bits = op.wire.bits
         grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
         def chunk(Wc, oc, bc, lr, key, ridx):
@@ -344,9 +355,9 @@ class MeshBackend(ExecutionBackend):
                     lambda: self._opt_shardings(opt_state, W), None)))
             return fn(W, opt_state, batch, lr, key, self._replica_index())
 
-        return self.timed("qsgd_step", prog, bits=bits)
+        return prog
 
-    def all_mean(self, *, sync_momentum: bool = False):
+    def _lower_all_mean(self, op, *, sync_momentum: bool = False):
         def chunk(Wc, oc):
             means = _tm(self._leaf_mean, Wc)
             s_k = self._probe(Wc, means)
@@ -368,9 +379,9 @@ class MeshBackend(ExecutionBackend):
                         lambda: self._opt_shardings(opt_state, W), None)))
             return fn(W, opt_state)
 
-        return self.timed("all_mean", prog)
+        return prog
 
-    def opt_mean(self):
+    def _lower_opt_mean(self, op):
         def chunk(oc):
             return _tm(lambda x: jnp.broadcast_to(
                 self._leaf_mean(x), x.shape).astype(x.dtype), oc)
@@ -389,10 +400,10 @@ class MeshBackend(ExecutionBackend):
                                if self.placement == "replica_tp" else None)))
             return fn(opt_state)
 
-        return self.timed("opt_mean", prog)
+        return prog
 
-    def inner_mean(self, group_size: int):
-        g = int(group_size)
+    def _lower_inner_mean(self, op):
+        g = int(op.group)
 
         def build(W):
             r_local = _leaves(W)[0].shape[0] // self.n_replica_devices
@@ -423,7 +434,7 @@ class MeshBackend(ExecutionBackend):
         def prog(W):
             return self._cached(f"inner{g}", (W,), lambda: build(W))(W)
 
-        return self.timed("inner_mean", prog, group_size=g)
+        return prog
 
     def _device_groups(self, devices_per_group: int):
         """Contiguous device groups along the innermost replica axis.
@@ -438,35 +449,64 @@ class MeshBackend(ExecutionBackend):
         return [list(range(i, i + devices_per_group))
                 for i in range(0, inner, devices_per_group)]
 
-    def quantized_all_mean(self, bits: int):
+    def _lower_quantized_all_mean(self, op):
+        """Byte-true QSGD anchor-delta exchange: each device quantizes its
+        replica chunk's deltas to (int8 levels, per-tensor f32 norms) and
+        the **levels+norms pair is what crosses the replica axes** — one
+        tiled all-gather of ~bits/32 of the f32 volume plus the norm
+        side-channel, exactly the payload ``op.wire_bytes`` prices.  Every
+        device dequantizes at the receiver and reduces the full stacked
+        deltas locally, which makes the mean (and the probe S_k) the same
+        reduction the vmap backend runs — the quantized path is
+        bit-matched across backends and placements, not merely close.  The
+        old path moved *dequantized f32* over the mesh (ROADMAP item).
+        Kernel routing is platform-keyed (TPU -> Pallas), matching the
+        vmap backend's choice exactly — see the note there."""
+        bits = op.wire.bits
+        use_kernel = jax.default_backend() == "tpu"
+
         def chunk(Wc, anchor, key, ridx):
             delta = _tm(lambda w, a: w.astype(jnp.float32) - a[None],
                         Wc, anchor)
             keys = self._local_keys(key, ridx)
-            dq = jax.vmap(lambda d, k: qsgd_mod.quantize_pytree(d, k, bits))(
-                delta, keys)
-            mean_d = _tm(lambda d: self._pmean(jnp.mean(d, axis=0)), dq)
-            s_loc = sum(jnp.sum(jnp.square(d - m[None]))
-                        for d, m in zip(_leaves(dq), _leaves(mean_d)))
-            s_k = jax.lax.psum(s_loc, self.replica_axes) / self.n_replicas
+            levels, norms = jax.vmap(
+                lambda d, k: qsgd_mod.quantize_split_pytree(
+                    d, k, bits, use_kernel=use_kernel))(delta, keys)
+            # the wire: int8 levels + norms, gathered over the replica axes
+            def gather(x):
+                return jax.lax.all_gather(x, self.replica_axes, axis=0,
+                                          tiled=True)
+            levels = _tm(gather, levels)
+            norms = _tm(gather, norms)
+            dq = qsgd_mod.dequantize_split_pytree(levels, norms, bits)
+            mean_d = _tm(lambda d: jnp.mean(d, axis=0), dq)
+            s_k = sum(jnp.sum(jnp.square(d - m[None])) / d.shape[0]
+                      for d, m in zip(_leaves(dq), _leaves(mean_d)))
             new_anchor = _tm(lambda a, m: a + m, anchor, mean_d)
             Wn = _tm(lambda w, a: jnp.broadcast_to(a[None], w.shape)
                      .astype(w.dtype), Wc, new_anchor)
             return Wn, new_anchor, s_k
 
         def prog(W, anchor, key):
+            # fully-manual region even under replica_tp: the partitioner
+            # rejects all_gather inside partial-auto (manual-subgroup)
+            # regions, so the model shards re-materialize at region entry
+            # over the fast intra-replica ICI — the *cross-replica* wire
+            # (the link the paper prices) still carries only int8 levels +
+            # norms, and out_shardings pins the TP layout right back
             fn = self._cached("qam", (W, anchor), lambda: self._shmap(
                 chunk,
                 (self._stacked(W), self._replicated(anchor), P(),
                  P(self._entry)),
                 (self._stacked(W), self._replicated(anchor), P()),
                 out_shardings=self._pin(
-                    lambda: self._param_shardings(W), None, None)))
+                    lambda: self._param_shardings(W), None, None),
+                auto=frozenset()))
             return fn(W, anchor, key, self._replica_index())
 
-        return self.timed("quantized_all_mean", prog, bits=bits)
+        return prog
 
-    def mean_delta(self):
+    def _lower_mean_delta(self, op):
         def chunk(Wc):
             means = _tm(self._leaf_mean, Wc)
             s_k = self._probe(Wc, means)
@@ -482,7 +522,7 @@ class MeshBackend(ExecutionBackend):
                 out_shardings=self._pin(lambda: self._param_shardings(W), None)))
             return fn(W)
 
-        return self.timed("mean_delta", prog)
+        return prog
 
     def collapse(self, W: Pytree) -> Pytree:
         # eager global mean works on sharded arrays; result is unsharded

@@ -5,6 +5,15 @@ array dimension on the default device, the local step vmaps over it, and the
 "collectives" are ``jnp.mean(axis=0)`` reductions.  It is the right backend
 for single-accelerator runs and for CI, and the reference the mesh backend
 is tested against.
+
+Programs are ``_lower_<op>`` builders resolved by
+``ExecutionBackend.lower(CollectiveOp)`` (``backends/ops.py``); pricing
+derives from the op descriptor, never from the builder.  The quantized
+exchange is **byte-true**: the payload is staged as int8 levels plus
+per-tensor norms (``core/qsgd.quantize_split_pytree``, Pallas kernels on
+TPU) and dequantized at the receiver — on one host device the "wire" is a
+representation boundary, but it is the same levels+norms payload the mesh
+backend all-gathers, so results match the sharded path bit-for-bit.
 """
 from __future__ import annotations
 
@@ -33,40 +42,43 @@ class VmapBackend(ExecutionBackend):
         d["use_kernel"] = self.use_kernel
         return d
 
-    # ------------------------------------------------------------- programs
-    # every builder returns through self.timed(...): with a bound clock each
-    # invocation reports (compute_s, comm_s, bytes) into the Timeline, with
-    # no clock the wrapper is pass-through (backends/base.py)
-    def replica_step(self, loss_fn, optimizer):
-        return self.timed(
-            "replica_step", jax.jit(avg.make_local_step(loss_fn, optimizer)))
+    # ------------------------------------------------------------ lowerings
+    # resolved by ExecutionBackend.lower(op); every compiled program comes
+    # back through timed(op, ...), so a bound clock prices each invocation
+    # from the op descriptor (backends/base.py)
+    def _lower_replica_step(self, op, *, loss_fn, optimizer):
+        return jax.jit(avg.make_local_step(loss_fn, optimizer))
 
-    def full_step(self, loss_fn, optimizer):
-        return self.timed(
-            "full_step", jax.jit(avg.make_full_step(loss_fn, optimizer)))
+    def _lower_full_step(self, op, *, loss_fn, optimizer):
+        return jax.jit(avg.make_full_step(loss_fn, optimizer))
 
-    def qsgd_step(self, loss_fn, optimizer, bits):
-        return self.timed(
-            "qsgd_step",
-            jax.jit(qsgd_mod.make_qsgd_step(loss_fn, optimizer, bits)),
-            bits=bits)
+    def _lower_qsgd_step(self, op, *, loss_fn, optimizer):
+        return jax.jit(
+            qsgd_mod.make_qsgd_step(loss_fn, optimizer, op.wire.bits))
 
-    def all_mean(self, *, sync_momentum: bool = False):
+    def _lower_all_mean(self, op, *, sync_momentum=False):
         use_kernel = self.use_kernel
-        return self.timed("all_mean", jax.jit(lambda W, o: avg.sync_replicas(
-            W, o, sync_momentum=sync_momentum, use_kernel=use_kernel)))
+        return jax.jit(lambda W, o: avg.sync_replicas(
+            W, o, sync_momentum=sync_momentum, use_kernel=use_kernel))
 
-    def inner_mean(self, group_size: int):
-        return self.timed("inner_mean",
-                          jax.jit(lambda W: avg.group_sync(W, group_size)),
-                          group_size=group_size)
+    def _lower_inner_mean(self, op):
+        g = op.group
+        return jax.jit(lambda W: avg.group_sync(W, g))
 
-    def opt_mean(self):
-        return self.timed("opt_mean", jax.jit(avg.sync_opt_state))
+    def _lower_opt_mean(self, op):
+        return jax.jit(avg.sync_opt_state)
 
-    def quantized_all_mean(self, bits: int):
-        """QSGD-quantized parameter deltas from a shared full-precision
-        anchor; every replica adopts anchor + mean(dequantized deltas)."""
+    def _lower_quantized_all_mean(self, op):
+        """Byte-true QSGD-quantized parameter deltas from a shared
+        full-precision anchor: each replica contributes (int8 levels,
+        per-tensor norm); the receiver dequantizes and every replica adopts
+        anchor + mean(dequantized deltas).  The quantize kernel routing is
+        *platform*-keyed (TPU -> Pallas, else reference math), NOT
+        ``use_kernel``-keyed: every backend must pick the same path or the
+        exchange's cross-backend bit-match breaks on TPU (the kernel's
+        blocked norm reduction rounds differently)."""
+        bits = op.wire.bits
+        use_kernel = jax.default_backend() == "tpu"
 
         @jax.jit
         def qsync(W, anchor, key):
@@ -74,8 +86,11 @@ class VmapBackend(ExecutionBackend):
             delta = jax.tree_util.tree_map(
                 lambda w, a: w.astype(jnp.float32) - a[None], W, anchor)
             keys = qsgd_mod.replica_keys(key, jnp.arange(R))
-            dq = jax.vmap(
-                lambda d, k: qsgd_mod.quantize_pytree(d, k, bits))(delta, keys)
+            levels, norms = jax.vmap(
+                lambda d, k: qsgd_mod.quantize_split_pytree(
+                    d, k, bits, use_kernel=use_kernel))(delta, keys)
+            # the wire payload ends here; receiver-side dequantize
+            dq = qsgd_mod.dequantize_split_pytree(levels, norms, bits)
             mean_d = jax.tree_util.tree_map(
                 lambda d: jnp.mean(d, axis=0), dq)
             s_k = sum(
@@ -89,9 +104,9 @@ class VmapBackend(ExecutionBackend):
                 W, new_anchor)
             return W_new, new_anchor, s_k
 
-        return self.timed("quantized_all_mean", qsync, bits=bits)
+        return qsync
 
-    def mean_delta(self):
+    def _lower_mean_delta(self, op):
         @jax.jit
         def delta(W):
             means = jax.tree_util.tree_map(
@@ -105,4 +120,4 @@ class VmapBackend(ExecutionBackend):
                 lambda x, m: m - x.astype(jnp.float32), W, means)
             return d, s_k
 
-        return self.timed("mean_delta", delta)
+        return delta

@@ -8,9 +8,14 @@ Checkpoints are backend-neutral: arrays are ``jax.device_get`` to host
 numpy before writing (gathering sharded arrays off a mesh), and the engine
 re-``put``s them through whatever ``ExecutionBackend`` the restoring run
 uses — a vmap-saved checkpoint resumes on a mesh and vice versa.  Strategy
-state may carry device pytrees (the qsgd_periodic anchor, DaSGD's pending
-correction) under the ``_arrays`` key; those go to ``strategy_arrays.npz``
-next to the json meta."""
+state may carry device pytrees under the ``_arrays`` key; those go to
+``strategy_arrays.npz`` next to the json meta.  This includes *in-flight
+overlap-op state*: when DaSGD checkpoints mid-overlap (snapshot
+dispatched, correction not yet applied), its ``state_dict`` fetches the
+``InFlightOp`` — a checkpoint is a synchronization point — and rides the
+pending delta, its variance probe and the due/snapshot steps here, so the
+resumed run applies the identical correction at the identical iteration
+and reports the identical probe (resume is exact, not approximate)."""
 from __future__ import annotations
 
 import json

@@ -27,14 +27,18 @@ def ring_allreduce_bytes(n_params: int, n_nodes: int, bytes_per_el: int = 4) -> 
     return 2.0 * (n_nodes - 1) / n_nodes * n_params * bytes_per_el
 
 
-# Latency hops per collective type.  A ring all-reduce is reduce-scatter +
-# all-gather: 2(n-1) sequential hops.  A plain ring all-gather is (n-1).
-# QSGD's quantized levels are not ring-reducible, so the exchange is a
-# gather + broadcast -- 2(n-1) hops, i.e. the latency is NOT reduced even
-# though the volume is (paper §IV).  A hierarchical inner mean is a ring
-# all-reduce *within one group*: the caller passes the group size as
-# ``n_nodes`` and the hops count that group only -- never the full ring
-# (the old unconditional 2(n-1) overcharged hierarchical strategies).
+# Latency hops per collective type, keyed by ``CollectiveOp.collective``
+# (backends/ops.py) -- the op descriptor names the kind, this table is the
+# physics; bytes come from ``op.wire_bytes`` (``ring_allreduce_bytes``
+# below is its f32 special case, kept for analytic callers).  A ring
+# all-reduce is reduce-scatter + all-gather: 2(n-1) sequential hops.  A
+# plain ring all-gather is (n-1).  QSGD's quantized levels are not
+# ring-reducible, so the exchange is a gather + broadcast -- 2(n-1) hops,
+# i.e. the latency is NOT reduced even though the volume is (paper §IV).
+# A hierarchical inner mean is a ring all-reduce *within one group*: the
+# group size rides the op (``op.group``) and the hops count that group
+# only -- never the full ring (the old unconditional 2(n-1) overcharged
+# hierarchical strategies).
 COLLECTIVE_HOPS = {
     "all_reduce": lambda n: 2 * (n - 1),
     "all_gather": lambda n: n - 1,

@@ -10,7 +10,6 @@ decision is off the critical path (DESIGN.md §2).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
 from typing import List, Optional
 
 from repro.configs.base import AveragingConfig
@@ -191,10 +190,19 @@ class AdaCommController(PeriodController):
         return self.tau
 
     def observe_loss(self, k: int, loss: float) -> None:
-        self._loss_sum += float(loss)
+        # lazy accumulation: when the engine defers loss read-back (the
+        # sampled WallClock's async pipeline), ``loss`` is a device scalar
+        # and the sum stays on device — the host converts only at block
+        # boundaries.  With ordinary floats this is the same f64 sum as
+        # always (bit-exact schedules preserved).  In deferred mode the
+        # sum accumulates in device f32, so block means may differ in the
+        # low bits from the host path — acceptable: that mode exists only
+        # under a real WallClock, whose schedule is wall-time-dependent
+        # and was never reproducible to begin with.
+        self._loss_sum = self._loss_sum + loss
         self._loss_n += 1
         if (k + 1) % self.interval == 0 and self._loss_n:
-            f = self._loss_sum / self._loss_n
+            f = float(self._loss_sum) / self._loss_n
             if self.f0 is None:
                 self.f0 = f                     # calibration block
             else:
@@ -203,6 +211,12 @@ class AdaCommController(PeriodController):
                     self.cfg.p_min), self.cfg.p_max))
             self._loss_sum = 0.0
             self._loss_n = 0
+
+    def state_dict(self) -> dict:
+        # the running sum may be a device scalar (deferred read-back);
+        # checkpoints need plain json-serializable state
+        self._loss_sum = float(self._loss_sum)
+        return super().state_dict()
 
 
 class AdaCommTimeController(AdaCommController):
@@ -247,14 +261,14 @@ class AdaCommTimeController(AdaCommController):
         self.clock = clock
 
     def observe_loss(self, k: int, loss: float) -> None:
-        self._loss_sum += float(loss)
+        self._loss_sum = self._loss_sum + loss   # lazy (see AdaComm above)
         self._loss_n += 1
         now = self.clock.now()
         if self._block_start is None:
             self._block_start = now
         if now - self._block_start < self.t0:
             return
-        f = self._loss_sum / self._loss_n
+        f = float(self._loss_sum) / self._loss_n
         if self.f0 is None:
             self.f0 = f                         # calibration block
         else:

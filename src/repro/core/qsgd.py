@@ -12,7 +12,7 @@ bandwidth-bound inner loop has a Pallas kernel (repro/kernels/qsgd_quant.py).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +63,47 @@ def quantize_pytree(grads: Pytree, key, bits: int = 8) -> Pytree:
         lv, nm = quantize(g, k, bits)
         out.append(dequantize(lv, nm, bits, g.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantize_split_pytree(grads: Pytree, key, bits: int = 8, *,
+                          use_kernel: bool = False) -> Tuple[Pytree, Pytree]:
+    """The byte-true wire representation: quantize every leaf but keep the
+    payload split as (int8 levels tree, f32 per-tensor norms tree) instead
+    of fusing the dequantize — this pair is what a byte-true exchange puts
+    on the wire (``backends/ops.qsgd_wire``); the receiver dequantizes via
+    ``dequantize_split_pytree``.  The RNG stream (one split per leaf, same
+    uniforms) matches ``quantize_pytree`` exactly, so split+dequantize is
+    bit-identical to the fused round-trip.  ``use_kernel`` routes the
+    bandwidth-bound inner loop through the Pallas kernels
+    (``kernels/qsgd_quant.py``) — profitable on TPU only."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    lvs, nms = [], []
+    for k, g in zip(keys, leaves):
+        if use_kernel:
+            from repro.kernels import qsgd_quant
+            u = jax.random.uniform(k, g.shape)
+            lv, nm = qsgd_quant.quantize(g.astype(jnp.float32), u, bits=bits)
+        else:
+            lv, nm = quantize(g, k, bits)
+        lvs.append(lv)
+        nms.append(nm)
+    return (jax.tree_util.tree_unflatten(treedef, lvs),
+            jax.tree_util.tree_unflatten(treedef, nms))
+
+
+def dequantize_split_pytree(levels: Pytree, norms: Pytree, bits: int = 8,
+                            dtype=jnp.float32) -> Pytree:
+    """Receiver side of the byte-true exchange.  Norm leaves may carry
+    leading batch dims (a stacked replica axis from an all-gather) — they
+    broadcast against the matching level leaves."""
+    s = (1 << (bits - 1)) - 1
+
+    def leaf(lv, nm):
+        nm = nm.reshape(nm.shape + (1,) * (lv.ndim - nm.ndim))
+        return (lv.astype(jnp.float32) * (nm / s)).astype(dtype)
+
+    return jax.tree_util.tree_map(leaf, levels, norms)
 
 
 def make_qsgd_step(loss_fn, optimizer: Optimizer, bits: int = 8):

@@ -8,9 +8,8 @@ at the end of each epoch").
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -7,7 +7,6 @@ directly."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import param_variance as _pv

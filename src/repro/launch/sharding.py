@@ -13,7 +13,7 @@ Plans (DESIGN.md §4):
 from __future__ import annotations
 
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

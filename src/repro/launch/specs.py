@@ -3,13 +3,13 @@ every (architecture x input shape) pair — no device allocation, weak-type
 correct, shardable.  This is what the dry-run lowers against."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.configs.base import InputShape, ModelConfig, RunConfig
+from repro.configs.base import InputShape, ModelConfig
 
 Pytree = Any
 

@@ -5,9 +5,8 @@ jit time (dryrun.py / train.py).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RunConfig

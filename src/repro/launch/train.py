@@ -66,6 +66,11 @@ def main():
                          "'<x>gbps' = SimulatedClock charging compute per "
                          "step and communication from the analytic model "
                          "at that bandwidth (bit-reproducible)")
+    ap.add_argument("--wallclock-sample-every", type=int, default=1,
+                    help="with --net real: block-until-ready only every N "
+                         "steps and interpolate the Timeline in between, "
+                         "keeping the async dispatch pipeline N steps deep "
+                         "(1 = measure every dispatch)")
     ap.add_argument("--adacomm-mode", default="iterations",
                     choices=["iterations", "time"],
                     help="adacomm block definition: 'iterations' (interval "
@@ -108,7 +113,8 @@ def main():
         warmup_full_sync_steps=args.warmup_sync, k_sample_frac=0.25,
         inner_period=args.inner_period, adacomm_mode=args.adacomm_mode,
         adacomm_t0=args.adacomm_t0)
-    clock = make_clock(args.net)
+    clock = make_clock(args.net,
+                       wallclock_sample_every=args.wallclock_sample_every)
     if args.adacomm_mode == "time" and clock is None:
         ap.error("--adacomm-mode time needs a clock: pass --net "
                  "real|10gbps|100gbps|<x>gbps")

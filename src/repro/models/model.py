@@ -11,7 +11,6 @@ For decode steps the dict carries a single token column (B,1).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -9,7 +9,7 @@ replica axis used by the periodic-averaging algorithms:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -25,6 +25,23 @@ Two implementations:
   AdaComm controller, the bench-regression gate) is bit-reproducible on
   CPU CI.
 
+Both clocks understand **overlap ops** (``backends/ops.py``): an
+``overlap=True`` collective is handed to ``dispatch_async`` — recorded on
+the Timeline with ``overlap=True`` but never blocking (WallClock) nor
+advancing simulated time (SimulatedClock) — and settled when the caller
+fetches the ``InFlightOp``: the WallClock blocks there and records the
+observed stall as a ``<name>.fetch`` record, the SimulatedClock advances
+only by the *un-overlapped remainder* ``max(0, t_end − now)``.  That is how
+DaSGD's delayed correction gets honest wall-clock credit for hiding the
+all-reduce behind local steps.
+
+``WallClock(sample_every=N)`` trades per-dispatch fidelity for pipeline
+depth: it blocks-until-ready only on every N-th engine step and
+interpolates the unsampled records in the Timeline — the drained backlog
+measured at each sample is redistributed over the window — so the async
+dispatch pipeline survives between samples (ROADMAP item; ``N=1`` is the
+exact PR-4 behavior).
+
 Clock state is training state: the time-based AdaComm schedule continues
 *mid-block* across a checkpoint/restore, so ``state_dict`` /
 ``load_state_dict`` ride ``checkpoint/io.py`` next to the strategy state.
@@ -33,7 +50,9 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
 
 from repro.core.comm_model import GBPS_10, GBPS_100, LATENCY_S, comm_time
 
@@ -98,6 +117,10 @@ class ProgramTiming:
     bytes: float = 0.0        # modeled bytes per node moved by the program
     t_start: float = 0.0      # clock coordinates
     t_end: float = 0.0
+    overlap: bool = False     # dispatched off the step path (InFlightOp);
+                              # its cost is settled at fetch, not here
+    interpolated: bool = False  # sampled-WallClock estimate, not a direct
+                                # block-until-ready measurement
 
 
 class Timeline:
@@ -129,6 +152,20 @@ class Timeline:
         agg["compute_s"] += t.compute_s
         agg["comm_s"] += t.comm_s
         agg["bytes"] += t.bytes
+
+    def amend(self, t: ProgramTiming, *, d_compute: float = 0.0,
+              d_comm: float = 0.0) -> None:
+        """Retroactively adjust an already-recorded timing (the sampled
+        WallClock redistributes each drained backlog over its window's
+        interpolated records), keeping the running aggregates consistent."""
+        t.compute_s += d_compute
+        t.comm_s += d_comm
+        t.t_end += d_compute + d_comm
+        self.compute_s += d_compute
+        self.comm_s += d_comm
+        agg = self.by_program[t.name]
+        agg["compute_s"] += d_compute
+        agg["comm_s"] += d_comm
 
     @property
     def last(self) -> Optional[ProgramTiming]:
@@ -183,6 +220,27 @@ class Clock:
         collective-free programs)."""
         raise NotImplementedError
 
+    # ------------------------------------------------------------- overlap
+    def dispatch_async(self, name: str, fn, args, *,
+                       comm_bytes: float = 0.0,
+                       collective: Optional[str] = None,
+                       n_nodes: int = 1) -> Tuple[Any, Optional[ProgramTiming]]:
+        """Dispatch an ``overlap=True`` collective without blocking the
+        step path; returns ``(outputs, record)`` — the record is handed
+        back to ``complete_async`` when the caller fetches the
+        ``InFlightOp``.  Base clocks without overlap support fall back to
+        a synchronous ``measure`` (the op still runs, just un-overlapped)."""
+        out = self.measure(name, fn, args, is_step=False,
+                           comm_bytes=comm_bytes, collective=collective,
+                           n_nodes=n_nodes)
+        return out, None
+
+    def complete_async(self, name: str, record: Optional[ProgramTiming],
+                       outputs=None) -> None:
+        """Settle a previously dispatched overlap op at fetch time: charge
+        whatever part of the exchange compute did *not* hide.  Base: the
+        fallback dispatch already paid in full."""
+
     # clock state is training state (the time-based AdaComm block schedule
     # must continue mid-block across restore) — see checkpoint/io.py
     def state_dict(self) -> Dict[str, Any]:
@@ -195,33 +253,134 @@ class Clock:
 class WallClock(Clock):
     """Real elapsed time: ``time.monotonic()`` around dispatched,
     block-until-ready program calls.  ``load_state_dict`` re-bases the
-    epoch so a restored run's ``now()`` continues from the saved time."""
+    epoch so a restored run's ``now()`` continues from the saved time.
+
+    ``sample_every=N`` (default 1 = block every dispatch, the PR-4
+    behavior) blocks only on engine steps where ``step % N == 0`` and
+    records *interpolated* timings in between: unsampled dispatches return
+    immediately (the async pipeline stays N steps deep) and get the last
+    sampled duration for their program as a provisional value; when the
+    next sample blocks, the real elapsed time since the previous sample —
+    which includes the window's drained backlog — is redistributed across
+    the window's interpolated records (``Timeline.amend``), *replacing*
+    the provisional values in both directions, so a compile-inflated
+    early sample can never poison later windows: per-window totals equal
+    real wall time, per-record values are interpolations and say so
+    (``ProgramTiming.interpolated``).  ``n_blocks`` counts the actual
+    block-until-ready calls (tests assert the sampling really happened)."""
 
     kind = "wall"
 
-    def __init__(self):
+    def __init__(self, *, sample_every: int = 1):
         super().__init__()
+        self.sample_every = max(1, int(sample_every))
         self._start = time.monotonic()
         self._base = 0.0
+        self.n_blocks = 0
+        self._est: Dict[str, float] = {}      # last sampled dt per program
+        self._mark: Optional[float] = None    # end of the last sampled block
+        # interpolated records since the last sampled block: (record, is_step)
+        self._window: List[Tuple[ProgramTiming, bool]] = []
+
+    @property
+    def defer_loss_readback(self) -> bool:
+        """The engine's per-step ``float(loss)`` read-back would re-sync
+        the pipeline this clock is trying to keep async — ask it to defer
+        host conversion to run end when sampling."""
+        return self.sample_every > 1
 
     def now(self) -> float:
         return time.monotonic() - self._start + self._base
 
-    def measure(self, name, fn, args, *, is_step, comm_bytes=0.0,
-                collective=None, n_nodes=1):
-        import jax
-        t0 = self.now()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        dt = self.now() - t0
-        # a fused program can't split compute from comm: attribute the
-        # measurement to the program's primary cost (docstring above)
-        self.timeline.record(ProgramTiming(
+    def _record(self, name, dt, *, is_step, comm_bytes, t0,
+                interpolated=False):
+        rec = ProgramTiming(
             name=name, step=self.timeline.step,
             compute_s=dt if is_step else 0.0,
             comm_s=0.0 if is_step else dt,
-            bytes=comm_bytes, t_start=t0, t_end=t0 + dt))
+            bytes=comm_bytes, t_start=t0, t_end=t0 + dt,
+            interpolated=interpolated)
+        self.timeline.record(rec)
+        return rec
+
+    def measure(self, name, fn, args, *, is_step, comm_bytes=0.0,
+                collective=None, n_nodes=1):
+        t0 = self.now()
+        out = fn(*args)
+        if self.sample_every > 1 and self.timeline.step % self.sample_every:
+            # unsampled: keep the pipeline async, interpolate from the
+            # last sample and reconcile at the next one
+            rec = self._record(name, self._est.get(name, 0.0),
+                               is_step=is_step, comm_bytes=comm_bytes,
+                               t0=t0, interpolated=True)
+            self._window.append((rec, is_step))
+            return out
+        jax.block_until_ready(out)
+        self.n_blocks += 1
+        t1 = self.now()
+        dt = t1 - t0
+        own = dt
+        if self.sample_every > 1:
+            if self._mark is None:
+                self._mark = t0
+            # real elapsed time since the previous sampled block — it
+            # covers the whole unsampled window (whose async backlog
+            # drained inside this block) plus this program's own run
+            elapsed = t1 - self._mark
+            self._mark = t1
+            est = self._est.get(name)
+            if self._window:
+                own = min(dt, est) if est is not None else dt
+                # rescale the window's provisional records to the real
+                # remainder, proportionally to their estimates — replaces
+                # over- and under-estimates alike (no one-way drift)
+                target = max(0.0, elapsed - own)
+                total = sum(r.compute_s + r.comm_s for r, _ in self._window)
+                n = len(self._window)
+                for r, r_is_step in self._window:
+                    w = ((r.compute_s + r.comm_s) / total if total > 0
+                         else 1.0 / n)
+                    d = w * target - (r.compute_s + r.comm_s)
+                    self.timeline.amend(r, d_compute=d if r_is_step else 0.0,
+                                        d_comm=0.0 if r_is_step else d)
+                self._window = []
+            self._est[name] = own
+        # a fused program can't split compute from comm: attribute the
+        # measurement to the program's primary cost (docstring above)
+        self._record(name, own, is_step=is_step, comm_bytes=comm_bytes, t0=t0)
         return out
+
+    # ------------------------------------------------------------- overlap
+    def dispatch_async(self, name, fn, args, *, comm_bytes=0.0,
+                       collective=None, n_nodes=1):
+        t0 = self.now()
+        out = fn(*args)                   # async dispatch preserved
+        rec = ProgramTiming(name=name, step=self.timeline.step,
+                            bytes=comm_bytes, t_start=t0, t_end=t0,
+                            overlap=True)
+        self.timeline.record(rec)
+        return out, rec
+
+    def complete_async(self, name, record, outputs=None):
+        t0 = self.now()
+        if outputs is not None:
+            jax.block_until_ready(outputs)
+            self.n_blocks += 1
+        dt = self.now() - t0
+        if record is not None:
+            record.t_end = t0 + dt        # the exchange was done by here
+        # the observed stall — what the overlap did NOT manage to hide.
+        # Unlike the SimulatedClock, the dispatch record carried no cost
+        # (wall time of an un-awaited dispatch is unknowable), so this is
+        # the exchange's single charge in the aggregates.
+        self.timeline.record(ProgramTiming(
+            name=f"{name}.fetch", step=self.timeline.step, comm_s=dt,
+            t_start=t0, t_end=t0 + dt))
+        if self._mark is not None:
+            # sampled mode: this stall is already charged above — exclude
+            # it from the next window's elapsed span, or the reconciliation
+            # would hand the same seconds to the interpolated records too
+            self._mark += dt
 
     def load_state_dict(self, state):
         self._base = float(state.get("t", 0.0))
@@ -274,6 +433,37 @@ class SimulatedClock(Clock):
             comm_s=comm_s, bytes=comm_bytes, t_start=t0, t_end=self._t))
         return out
 
+    # ------------------------------------------------------------- overlap
+    def dispatch_async(self, name, fn, args, *, comm_bytes=0.0,
+                       collective=None, n_nodes=1):
+        """The exchange rides a concurrent stream: its full cost is
+        recorded (off-path, ``overlap=True``) with ``t_end`` marking when
+        the wire would be done, but simulated time does NOT advance — the
+        step path keeps computing underneath."""
+        out = fn(*args)
+        comm_s = self.comm_cost(comm_bytes, collective, n_nodes)
+        rec = ProgramTiming(name=name, step=self.timeline.step,
+                            comm_s=comm_s, bytes=comm_bytes,
+                            t_start=self._t, t_end=self._t + comm_s,
+                            overlap=True)
+        self.timeline.record(rec)
+        return out, rec
+
+    def complete_async(self, name, record, outputs=None):
+        """Fetch: advance simulated time by the un-overlapped remainder
+        only.  If the local steps of the delay window took longer than the
+        exchange, the wait is zero — the collective was fully hidden.  The
+        fetch record shows the stall as its *duration* (t_start..t_end)
+        with ``comm_s=0``: the exchange's full cost was already recorded
+        at dispatch, so aggregates count the wire exactly once."""
+        wait = 0.0
+        if record is not None:
+            wait = max(0.0, record.t_end - self._t)
+            self._t += wait
+        self.timeline.record(ProgramTiming(
+            name=f"{name}.fetch", step=self.timeline.step,
+            t_start=self._t - wait, t_end=self._t))
+
     def state_dict(self):
         d = super().state_dict()
         d["net"] = self.net.name
@@ -283,15 +473,17 @@ class SimulatedClock(Clock):
         self._t = float(state.get("t", 0.0))
 
 
-def make_clock(spec) -> Optional[Clock]:
+def make_clock(spec, *, wallclock_sample_every: int = 1) -> Optional[Clock]:
     """Driver-flag resolution: ``None``/``'none'`` -> no clock,
-    ``'real'``/``'wall'`` -> WallClock, anything else -> SimulatedClock
-    on that network (``'10gbps'``, ``'100gbps'``, ``'<x>gbps'``)."""
+    ``'real'``/``'wall'`` -> WallClock (``wallclock_sample_every=N`` blocks
+    only every N-th step and interpolates in between), anything else ->
+    SimulatedClock on that network (``'10gbps'``, ``'100gbps'``,
+    ``'<x>gbps'``)."""
     if spec is None or isinstance(spec, Clock):
         return spec
     s = str(spec).lower()
     if s in ("", "none"):
         return None
     if s in ("real", "wall"):
-        return WallClock()
+        return WallClock(sample_every=wallclock_sample_every)
     return SimulatedClock(s)

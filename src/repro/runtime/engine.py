@@ -13,6 +13,9 @@ outputs:
 * ``info["loss"]``       -> training-loss sample
 * ``info["s_k"]``        -> a sync happened: feed ``strategy.observe`` and
                             record the probe / period trajectory
+* ``info["s_k_at"]``     -> ``(step, s_k)``: a sync whose probe was fetched
+                            *later* than it was measured (DaSGD's overlapped
+                            snapshot) — recorded against its snapshot step
 * ``info["inner_sync"]`` -> hierarchical inner-sync marker
 
 A small callback bus hangs off the loop (variance probing, periodic eval,
@@ -291,6 +294,23 @@ class TrainerEngine:
             hist.lr_start_step = start_step
         t0 = time.time()
         tl = self.timeline
+        # a sampled WallClock asks to keep the dispatch pipeline async:
+        # per-step float(loss) read-back would re-sync it every iteration,
+        # so losses stay device scalars until run end (values identical)
+        defer_loss = bool(getattr(self.clock, "defer_loss_readback", False))
+
+        def record_sync(at, lr_at, s_val, timing):
+            """One sync event into history + controller + callbacks —
+            shared by the immediate ("s_k") and the overlapped-settlement
+            ("s_k_at") paths so they can never drift apart."""
+            s_k = float(s_val)
+            self.strategy.observe(at, lr_at, s_k)
+            hist.s_k.append(s_k)
+            hist.sync_steps.append(at)
+            hist.period_history.append(self.strategy.period)
+            for cb in self.callbacks:
+                cb.on_sync(self, at, s_k, timing)
+
         for k in range(start_step, stop):
             lr = self.lr_fn(k)
             hist.lrs.append(lr)
@@ -306,7 +326,8 @@ class TrainerEngine:
                 timing = tl.last if tl is not None else None
                 if "loss" in info:
                     step_info = info
-                    loss_val = float(info["loss"])
+                    loss_val = (info["loss"] if defer_loss
+                                else float(info["loss"]))
                     hist.losses.append(loss_val)
                     self.strategy.observe_loss(k, loss_val)
                     if timing is not None:
@@ -314,17 +335,28 @@ class TrainerEngine:
                     for cb in self.callbacks:
                         cb.on_step_end(self, k, info)
                 if "s_k" in info:
-                    s_k = float(info["s_k"])
-                    self.strategy.observe(k, lr, s_k)
-                    hist.s_k.append(s_k)
-                    hist.sync_steps.append(k)
-                    hist.period_history.append(self.strategy.period)
-                    for cb in self.callbacks:
-                        cb.on_sync(self, k, s_k, timing)
+                    record_sync(k, lr, info["s_k"], timing)
+                if "s_k_at" in info:
+                    # an overlapped sync settled: the probe belongs to the
+                    # snapshot iteration, not the fetch iteration — there
+                    # is at most one exchange in flight (delay < period),
+                    # so ordering within the history is preserved
+                    at, s_val = info["s_k_at"]
+                    at = int(at)
+                    if tl is not None:
+                        # on_sync's contract is the *exchange's* record
+                        # (comm_s/bytes), which was written at dispatch —
+                        # not the apply program's that tl.last holds now
+                        timing = next(
+                            (r for r in reversed(tl.records)
+                             if r.overlap and r.step == at), timing)
+                    record_sync(at, self.lr_fn(at), s_val, timing)
                 if info.get("inner_sync"):
                     hist.inner_sync_steps.append(k)
             for cb in self.callbacks:
                 cb.on_iteration_end(self, k, step_info)
+        if defer_loss:
+            hist.losses[:] = [float(v) for v in hist.losses]
         hist.wall_s += time.time() - t0
         hist.n_syncs = self.strategy.n_comm_events - self._comm_event_base
         if tl is not None:

@@ -8,9 +8,12 @@ falls (averaging tightens the error floor near convergence).  The schedule
 is ``tau_j = ceil(tau_0 * sqrt(F_j / F_0))`` recomputed every
 ``cfg.adacomm_interval`` iterations — see ``AdaCommController``.
 
-The strategy itself is the plain periodic machinery; only the controller
-(and the ``observe_loss`` feedback route) differ, which is exactly the
-separation the strategy/backend split is for.
+The strategy itself is the plain periodic machinery — it inherits the
+``replica_step``/``all_mean`` CollectiveOp descriptors and their derived
+pricing untouched; only the controller (and the ``observe_loss`` feedback
+route) differ, which is exactly the separation the strategy/backend split
+is for.  Because the clock is a first-class engine citizen, the time mode
+adapts against the same honest bytes/latency the op descriptors price.
 """
 from __future__ import annotations
 

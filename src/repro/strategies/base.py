@@ -5,15 +5,14 @@ replicas synchronize — is the variable worth optimizing.  A
 ``CommunicationStrategy`` therefore owns everything policy-specific:
 
 * ``compile(loss_fn, optimizer, backend)`` — build the strategy's device
-  programs (local step, sync, quantized sync, ...) from the
-  ``ExecutionBackend``'s primitives (``backend.replica_step``,
-  ``backend.all_mean``, ``backend.quantized_all_mean``,
-  ``backend.inner_mean`` — ``repro/backends/base.py``): the backend owns
-  device placement and collectives, the strategy owns policy, so the same
-  strategy compiles against one host device (vmap) or a sharded mesh.
-  Programs all share one signature
-  ``(W, opt_state, batch, lr, key) -> (W, opt_state, info)`` so the engine
-  can dispatch them without knowing what they are.
+  programs by **emitting ``CollectiveOp`` descriptors**
+  (``backends/ops.py``) and asking the ``ExecutionBackend`` to lower them
+  (``backend.lower(op, ...)``): the op declares the collective kind, wire
+  format, group and overlap hint; the backend owns device placement and
+  how the exchange actually runs, so the same strategy compiles against
+  one host device (vmap) or a sharded mesh.  Programs all share one
+  signature ``(W, opt_state, batch, lr, key) -> (W, opt_state, info)`` so
+  the engine can dispatch them without knowing what they are.
 * ``actions(k)`` — the host-side per-iteration decision: which program
   names to dispatch at iteration k, in order.  This absorbs the old
   ``PeriodController`` hierarchy; decisions are plain python and stay off
@@ -21,8 +20,11 @@ replicas synchronize — is the variable worth optimizing.  A
   asynchronous — DESIGN.md §2).
 * ``observe(k, lr, s_k)`` — feedback after a sync: the measured variance
   probe S_k drives adaptive policies (Algorithm 2 lines 14-19).
-* ``comm_bytes_per_sync(n_params, n_nodes)`` — accounting hook feeding the
-  analytic model in ``core/comm_model.py``.
+* ``sync_op()`` — the ``CollectiveOp`` describing one communication event.
+  It is both what ``compile`` lowers for the sync program and the *sole*
+  pricing source for the analytic accounting (``comm_bytes_per_sync`` /
+  ``comm_stats`` derive bytes and latency structure from the descriptor —
+  no parallel table to keep in sync).
 * ``state_dict() / load_state_dict()`` — adaptive state (p, C2, counters)
   for checkpoint/resume; restoring must continue the same sync schedule.
 
@@ -33,8 +35,9 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, List, Optional, Tuple, Type
 
+from repro.backends.ops import (CollectiveOp, all_mean_op, replica_step_op)
 from repro.configs.base import AveragingConfig
-from repro.core.comm_model import CommStats, comm_time, ring_allreduce_bytes
+from repro.core.comm_model import CommStats, comm_time
 
 Pytree = Any
 # program: (W, opt_state, batch, lr, key) -> (W, opt_state, info)
@@ -115,17 +118,28 @@ class CommunicationStrategy:
         strategies) — drives ``TrainHistory.n_syncs``."""
         return self._comm_events
 
-    # ------------------------------------------------------------ accounting
-    def comm_bytes_per_sync(self, n_params: int, n_nodes: int) -> float:
-        """Bytes moved per node per communication event (ring all-reduce
-        unless the strategy compresses)."""
-        return ring_allreduce_bytes(n_params, n_nodes)
+    # -------------------------------------------------------- op descriptors
+    def step_op(self) -> CollectiveOp:
+        """The per-iteration device program's descriptor (collective-free
+        local step for periodic strategies; every-step baselines override
+        with their fused-exchange step)."""
+        return replica_step_op()
 
-    def comm_collective(self) -> str:
-        """Collective type of a sync event, for the per-collective latency
-        model (``comm_model.COLLECTIVE_HOPS``): ring all-reduce unless the
-        strategy's exchange is not ring-reducible."""
-        return "all_reduce"
+    def sync_op(self) -> CollectiveOp:
+        """Descriptor of one communication event — what ``compile`` lowers
+        for the sync program and what every accounting path prices.  Base:
+        a full-precision ring all-reduce of the parameters."""
+        return all_mean_op()
+
+    # ------------------------------------------------------------ accounting
+    # Derived from sync_op(): the analytic model prices the same descriptor
+    # the backend lowered, so there is no second table to drift.  The
+    # analytic hooks pass n_tensors=0 — side-channel norm bytes show up in
+    # the *measured* wire-byte columns (Timeline), not the closed form.
+    def comm_bytes_per_sync(self, n_params: int, n_nodes: int) -> float:
+        """Bytes moved per node per communication event, priced from the
+        strategy's ``sync_op`` wire format."""
+        return self.sync_op().wire_bytes(n_params, n_nodes)
 
     def comm_events_for(self, total_steps: int, n_syncs: int) -> int:
         """How many communication events a run of ``total_steps`` with
@@ -136,8 +150,9 @@ class CommunicationStrategy:
                    n_syncs: int, bandwidth: float) -> CommStats:
         per = self.comm_bytes_per_sync(n_params, n_nodes)
         ev = self.comm_events_for(total_steps, n_syncs)
+        coll = self.sync_op().collective or "all_reduce"
         return CommStats(per, ev, comm_time(per, ev, n_nodes, bandwidth,
-                                            collective=self.comm_collective()))
+                                            collective=coll))
 
     # ------------------------------------------------------------ checkpoint
     def state_dict(self) -> Dict[str, Any]:

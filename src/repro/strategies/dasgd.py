@@ -11,27 +11,46 @@ replicas keep taking local steps in between.  Each replica then holds
 the correction never discards local progress (the paper's gradient-delay
 compensation, expressed on parameters).
 
-Two device programs implement the pair:
+The overlap is **real**, not simulated: the snapshot is an
+``overlap=True`` CollectiveOp (``ops.mean_delta_op``), so dispatching it
+returns an ``InFlightOp`` handle immediately — the step path never blocks
+on the exchange (no host read-back of the probe at the snapshot step), jax
+keeps streaming local steps behind it, and the clock records the collective
+*off* the critical path (``Timeline`` overlap records; a ``SimulatedClock``
+only charges the un-overlapped remainder at fetch time).  Two programs
+implement the pair:
 
-* ``sync`` (snapshot)  — ``backend.mean_delta()``: the only collective;
-  produces the per-replica correction ``w̄ − w_i`` and the variance probe
-  S_k, both recorded at the *snapshot* step.
-* ``sync_apply``       — ``backend.apply_delta()``: a collective-free
-  elementwise add ``d`` steps later.
+* ``sync`` (snapshot)  — dispatches ``mean_delta`` asynchronously; the only
+  collective; produces the per-replica correction ``w̄ − w_i`` and the
+  variance probe S_k, both *fetched* d steps later.
+* ``sync_apply``       — fetches the in-flight op and applies the
+  correction: a collective-free elementwise add (donated buffers where
+  donation is real).  The probe is reported to the engine as
+  ``s_k_at=(snapshot_step, S_k)`` so history and the controller still see
+  it attributed to the snapshot iteration.
 
-The in-flight correction is training state: it rides the checkpoint under
-``_arrays`` together with its due step, so a resumed run applies it at the
-same iteration the uninterrupted run would have.  Warmup iterations
-(``warmup_full_sync_steps``) use the immediate full sync — the paper
-overlaps steady-state rounds, not the period-1 warmup.
+The in-flight correction is training state: ``state_dict`` fetches it (a
+checkpoint is a synchronization point) and rides it under ``_arrays``
+together with its probe, due step and snapshot step, so a resumed run
+applies the identical correction at the identical iteration and reports the
+identical S_k.  A corollary of real overlap: a run *segment* that ends
+between a snapshot and its apply has recorded the communication event
+(``n_comm_events``) but not yet its probe — the probe belongs to whichever
+segment fetches it (a continued ``run()`` or a checkpoint-resumed one), so
+``len(history.s_k)`` can trail ``n_syncs`` by the one in-flight exchange,
+and consecutive segments' histories always reassemble the uninterrupted
+run exactly (tested).  Warmup iterations (``warmup_full_sync_steps``) use
+the immediate full sync — the paper overlaps steady-state rounds, not the
+period-1 warmup.
 """
 from __future__ import annotations
 
 from typing import Any, Dict
 
 import jax
+import jax.numpy as jnp
 
-from repro.configs.base import AveragingConfig
+from repro.backends.ops import InFlightOp, apply_delta_op, mean_delta_op
 from repro.core.controller import ConstantPeriodController
 from repro.strategies.base import STEP, SYNC, register_strategy
 from repro.strategies.periodic import PeriodicAveragingStrategy
@@ -47,32 +66,50 @@ class DaSGDStrategy(PeriodicAveragingStrategy):
     name = "dasgd"
     controller_cls = ConstantPeriodController
 
-    def __init__(self, cfg: AveragingConfig, total_steps: int, **kw):
+    def __init__(self, cfg, total_steps: int, **kw):
         super().__init__(cfg, total_steps, **kw)
         # keep the overlap window shorter than the averaging period so a
         # new snapshot never lands while one is still in flight
         self.delay = max(1, min(int(cfg.dasgd_delay), max(1, cfg.p_const - 1)))
-        self._pending = None          # device pytree: stacked corrections
+        self._pending = None          # InFlightOp | fetched (delta, s_k)
         self._apply_at = None         # absolute step the correction is due
+        self._snap_at = None          # absolute step the snapshot was taken
+
+    def sync_op(self):
+        return mean_delta_op(overlap=True)
 
     def _build_programs(self, loss_fn, optimizer, backend):
         programs = super()._build_programs(loss_fn, optimizer, backend)
         programs[FULL_SYNC] = programs[SYNC]   # warmup path: immediate sync
-        delta_fn = backend.mean_delta()
-        apply_fn = backend.apply_delta()
+        delta_fn = backend.lower(self.sync_op())
+        apply_fn = backend.lower(apply_delta_op())
 
         def snapshot_prog(W, opt_state, batch, lr, key):
-            self._pending, s_k = delta_fn(W)
-            return W, opt_state, {"s_k": s_k}
+            # overlap=True: returns an InFlightOp — nothing here blocks,
+            # the collective drains behind the next d local steps
+            self._pending = delta_fn(W)
+            return W, opt_state, {"overlap_dispatch": True}
 
         def apply_prog(W, opt_state, batch, lr, key):
-            W = apply_fn(W, self._pending)
+            delta, s_k = self._fetch_pending()
+            W = apply_fn(W, delta)
+            info: Dict[str, Any] = {"delayed_apply": True}
+            if s_k is not None and self._snap_at is not None:
+                # attribute the probe to the snapshot iteration it measured
+                info["s_k_at"] = (self._snap_at, s_k)
             self._pending = None
-            return W, opt_state, {"delayed_apply": True}
+            self._snap_at = None
+            return W, opt_state, info
 
         programs[SYNC] = snapshot_prog
         programs[SYNC_APPLY] = apply_prog
         return programs
+
+    def _fetch_pending(self):
+        p = self._pending
+        if isinstance(p, InFlightOp):
+            p = p.fetch()
+        return p
 
     def actions(self, k: int):
         acts = [STEP]
@@ -87,15 +124,22 @@ class DaSGDStrategy(PeriodicAveragingStrategy):
                 self._comm_events += 1
                 acts.append(SYNC)
                 self._apply_at = k + self.delay
+                self._snap_at = k
         return tuple(acts)
 
     # ------------------------------------------------------------ checkpoint
     def state_dict(self) -> Dict[str, Any]:
         d = super().state_dict()
         d["apply_at"] = self._apply_at
-        if self._pending is not None:
-            d.setdefault("_arrays", {})["pending_delta"] = \
-                jax.device_get(self._pending)
+        d["snap_at"] = self._snap_at
+        pending = self._fetch_pending()    # a checkpoint is a sync point
+        if pending is not None:
+            self._pending = pending        # keep the fetched pair live
+            delta, s_k = pending
+            arrays = d.setdefault("_arrays", {})
+            arrays["pending_delta"] = jax.device_get(delta)
+            if s_k is not None:
+                arrays["pending_s_k"] = jax.device_get(s_k)
         return d
 
     def load_state_dict(self, state: Dict[str, Any]) -> None:
@@ -103,14 +147,23 @@ class DaSGDStrategy(PeriodicAveragingStrategy):
         self._apply_at = state.get("apply_at")
         if self._apply_at is not None:
             self._apply_at = int(self._apply_at)
+        self._snap_at = state.get("snap_at")
+        if self._snap_at is not None:
+            self._snap_at = int(self._snap_at)
         arrays = state.get("_arrays") or {}
         if "pending_delta" in arrays:
             pending = arrays["pending_delta"]
             if self.backend is not None:
                 pending = self.backend.put_params(pending)
-            self._pending = pending
+            # pre-overlap checkpoints carry no probe (it was recorded at
+            # the snapshot already): apply without re-reporting it
+            s_k = arrays.get("pending_s_k")
+            if s_k is not None:
+                s_k = jnp.asarray(s_k)
+            self._pending = (pending, s_k)
         else:
             # no correction in flight (or a legacy checkpoint without one):
             # drop any stale due-step so apply never sees a missing delta
             self._pending = None
             self._apply_at = None
+            self._snap_at = None

@@ -9,9 +9,10 @@ configuration.  This wires the previously-dead
 ``HierarchicalADPSGDController.inner_sync_now`` path end-to-end: the inner
 counter is consulted every iteration, and an outer sync subsumes the inner
 one (the global average already equalizes every group).  The inner average
-is ``backend.inner_mean(group_size)``: a device-local reshape on the vmap
-backend, an in-group ``pmean`` (fast ICI, never the cross-pod link) on the
-mesh backend.
+is the ``inner_mean(group)`` CollectiveOp: a device-local reshape on the
+vmap backend, an in-group ``pmean`` (fast ICI, never the cross-pod link) on
+the mesh backend — and because the group rides the op descriptor, pricing
+sees the group, never the world.
 
 Comm accounting deliberately inherits the base hooks: the analytic model
 (core/comm_model.py) prices the *slow cross-pod link*, which only outer
@@ -25,6 +26,7 @@ from typing import Any, Dict
 
 import jax
 
+from repro.backends.ops import inner_mean_op
 from repro.core.controller import HierarchicalADPSGDController
 from repro.strategies.base import INNER_SYNC, STEP, SYNC, register_strategy
 from repro.strategies.periodic import PeriodicAveragingStrategy
@@ -58,7 +60,9 @@ class HierarchicalADPSGDStrategy(PeriodicAveragingStrategy):
             while R % g:
                 g -= 1
             if g not in built:
-                built[g] = backend.inner_mean(g)
+                # the inner op's group rides the descriptor, so the clock
+                # prices the in-group ring (never the world) automatically
+                built[g] = backend.lower(inner_mean_op(g))
             return built[g](W), opt_state, {"inner_sync": True}
 
         programs[INNER_SYNC] = inner_prog

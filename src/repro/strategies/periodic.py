@@ -3,16 +3,18 @@
 ``PeriodicAveragingStrategy`` is the shared machinery: a collective-free
 local step every iteration, and the replica-averaging sync program on the
 schedule its ``PeriodController`` picks (constant / decreasing / adaptive —
-Algorithms 1 and 2).  Both programs come from the ``ExecutionBackend``
-(``backend.replica_step`` / ``backend.all_mean``), so the same policy runs
-on one host device or sharded over a mesh.  The controller hierarchy from
-``core/controller.py`` survives as the strategies' internal schedule state;
-the engine only ever sees ``actions``.
+Algorithms 1 and 2).  Both programs are ``CollectiveOp`` descriptors
+(``step_op`` / ``sync_op``) lowered by the ``ExecutionBackend``
+(``backend.lower``), so the same policy runs on one host device or sharded
+over a mesh and is priced from the very descriptors it lowered.  The
+controller hierarchy from ``core/controller.py`` survives as the
+strategies' internal schedule state; the engine only ever sees ``actions``.
 """
 from __future__ import annotations
 
 from typing import Any, Dict, Optional, Type
 
+from repro.backends.ops import all_mean_op, full_step_op
 from repro.configs.base import AveragingConfig
 from repro.core.controller import (ADPSGDController, ConstantPeriodController,
                                    DecreasingPeriodController, PeriodController)
@@ -42,8 +44,13 @@ class PeriodicAveragingStrategy(CommunicationStrategy):
         self.controller = controller
 
     def _build_programs(self, loss_fn, optimizer, backend):
-        step = backend.replica_step(loss_fn, optimizer)
-        sync = backend.all_mean(sync_momentum=self.cfg.sync_momentum)
+        step = backend.lower(self.step_op(),
+                             loss_fn=loss_fn, optimizer=optimizer)
+        # always the full-precision all_mean op — subclasses whose
+        # steady-state sync_op compresses (qsgd_periodic) still seed their
+        # anchor through this program
+        sync = backend.lower(all_mean_op(),
+                             sync_momentum=self.cfg.sync_momentum)
 
         def step_prog(W, opt_state, batch, lr, key):
             W, opt_state, metrics = step(W, opt_state, batch, lr)
@@ -116,8 +123,17 @@ class FullSGDStrategy(CommunicationStrategy):
 
     name = "fullsgd"
 
+    def step_op(self):
+        return full_step_op()
+
+    def sync_op(self):
+        # the communication event IS the fused step: one f32 ring
+        # all-reduce of the gradients per iteration
+        return full_step_op()
+
     def _build_programs(self, loss_fn, optimizer, backend):
-        step = backend.full_step(loss_fn, optimizer)
+        step = backend.lower(self.step_op(),
+                             loss_fn=loss_fn, optimizer=optimizer)
 
         def step_prog(W, opt_state, batch, lr, key):
             W, opt_state, metrics = step(W, opt_state, batch, lr)

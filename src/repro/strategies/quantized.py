@@ -9,19 +9,23 @@
                     stacking both of the paper's communication savings.
 
 The composed sync keeps a full-precision anchor (the last agreed average);
-at each sync every replica quantizes its delta from the anchor, the
-dequantized deltas are averaged, and anchor + mean-delta becomes the new
-agreed parameter value.  The first sync transmits full precision to seed the
-anchor; after that the anchor is training state — it rides the checkpoint
-(``state_dict()`` exports it under ``_arrays``) so a resumed run continues
-quantized exchanges immediately instead of paying an extra full-precision
-reseed sync.  The variance probe S_k is measured on the communicated
-(dequantized) deltas, so the adaptive controller sees exactly the statistic
-the paper's Algorithm 2 lines 10-11 prescribe.
+at each sync every replica quantizes its delta from the anchor into the
+**byte-true wire payload** — int8 levels plus per-tensor norms
+(``ops.quantized_all_mean_op``) — which the backend all-gathers and
+dequantizes at the receiver; anchor + mean(dequantized deltas) becomes the
+new agreed parameter value.  The first sync transmits full precision to
+seed the anchor; after that the anchor is training state — it rides the
+checkpoint (``state_dict()`` exports it under ``_arrays``) so a resumed run
+continues quantized exchanges immediately instead of paying an extra
+full-precision reseed sync.  The variance probe S_k is measured on the
+communicated (dequantized) deltas, so the adaptive controller sees exactly
+the statistic the paper's Algorithm 2 lines 10-11 prescribe.
 
-Both syncs are backend primitives (``backend.all_mean`` /
-``backend.quantized_all_mean``), so the quantized exchange lowers to real
-collectives on a mesh backend.
+Both syncs are ``CollectiveOp`` descriptors lowered by the backend, and the
+same descriptors price the accounting: the analytic hooks report
+qsgd_bits/32 of the FULLSGD volume (the paper's §IV figure, norms
+negligible), while the measured wire-byte columns in ``BENCH_engine.json``
+include the norm side-channel the byte-true exchange actually moves.
 """
 from __future__ import annotations
 
@@ -29,19 +33,12 @@ from typing import Any, Dict
 
 import jax
 
-from repro.configs.base import AveragingConfig
-from repro.core.comm_model import ring_allreduce_bytes
+from repro.backends.ops import (opt_mean_op, qsgd_step_op,
+                                quantized_all_mean_op)
 from repro.core.controller import ADPSGDController
 from repro.strategies.base import (STEP, SYNC, CommunicationStrategy,
                                    register_strategy)
 from repro.strategies.periodic import PeriodicAveragingStrategy
-
-
-def qsgd_bytes_per_sync(cfg: AveragingConfig, n_params: int,
-                        n_nodes: int) -> float:
-    """Quantized levels are not ring-reducible -> the paper charges
-    qsgd_bits/32 of the FULLSGD volume with unreduced latency."""
-    return ring_allreduce_bytes(n_params, n_nodes) * cfg.qsgd_bits / 32.0
 
 
 @register_strategy
@@ -50,8 +47,18 @@ class QSGDStrategy(CommunicationStrategy):
 
     name = "qsgd"
 
+    def step_op(self):
+        return qsgd_step_op(self.cfg.qsgd_bits)
+
+    def sync_op(self):
+        # the communication event is the fused quantized-gradient step:
+        # gather+broadcast (not ring-reducible — latency unreduced) of
+        # bits/32 of the volume, the paper's accounting
+        return qsgd_step_op(self.cfg.qsgd_bits)
+
     def _build_programs(self, loss_fn, optimizer, backend):
-        step = backend.qsgd_step(loss_fn, optimizer, self.cfg.qsgd_bits)
+        step = backend.lower(self.step_op(),
+                             loss_fn=loss_fn, optimizer=optimizer)
 
         def step_prog(W, opt_state, batch, lr, key):
             W, opt_state, metrics = step(W, opt_state, batch, lr, key)
@@ -62,12 +69,6 @@ class QSGDStrategy(CommunicationStrategy):
     def actions(self, k: int):
         self._comm_events += 1
         return (STEP,)
-
-    def comm_bytes_per_sync(self, n_params: int, n_nodes: int) -> float:
-        return qsgd_bytes_per_sync(self.cfg, n_params, n_nodes)
-
-    def comm_collective(self) -> str:
-        return "gather_bcast"       # not ring-reducible; latency unreduced
 
     def comm_events_for(self, total_steps: int, n_syncs: int) -> int:
         return total_steps
@@ -80,15 +81,20 @@ class QSGDPeriodicStrategy(PeriodicAveragingStrategy):
     name = "qsgd_periodic"
     controller_cls = ADPSGDController
 
-    def __init__(self, cfg: AveragingConfig, total_steps: int, **kw):
+    def __init__(self, cfg, total_steps: int, **kw):
         super().__init__(cfg, total_steps, **kw)
         self._anchor = None          # full-precision last agreed average
+
+    def sync_op(self):
+        # byte-true anchor-delta exchange: int8 levels + per-tensor norms
+        return quantized_all_mean_op(self.cfg.qsgd_bits)
 
     def _build_programs(self, loss_fn, optimizer, backend):
         programs = super()._build_programs(loss_fn, optimizer, backend)
         full_sync_prog = programs[SYNC]        # parent's full-precision sync
-        qsync = backend.quantized_all_mean(self.cfg.qsgd_bits)
-        opt_mean = backend.opt_mean() if self.cfg.sync_momentum else None
+        qsync = backend.lower(self.sync_op())
+        opt_mean = (backend.lower(opt_mean_op())
+                    if self.cfg.sync_momentum else None)
 
         def sync_prog(W, opt_state, batch, lr, key):
             if self._anchor is None:
@@ -103,12 +109,6 @@ class QSGDPeriodicStrategy(PeriodicAveragingStrategy):
 
         programs[SYNC] = sync_prog
         return programs
-
-    def comm_bytes_per_sync(self, n_params: int, n_nodes: int) -> float:
-        return qsgd_bytes_per_sync(self.cfg, n_params, n_nodes)
-
-    def comm_collective(self) -> str:
-        return "gather_bcast"
 
     # ------------------------------------------------------------ checkpoint
     # The anchor is the agreed value every later delta quantizes against —

@@ -285,10 +285,14 @@ def test_cross_placement_resume(setup8, vmap_baseline, tmp_path,
 
 # ---------------------------------------------------------------------------
 # Reduced-transformer family parity (ROADMAP item): one config per model
-# family under mesh+replica_tp vs the vmap baseline.  Too slow for the
-# per-PR suites — the nightly/dispatch `placements-transformer` CI job
-# opts in via PLACEMENTS_TRANSFORMER=1 (with 8 forced host devices).
+# family under mesh+replica_tp vs the vmap baseline.  The cheapest cells —
+# dense and ssm, a few seconds each from nightly timings — run in the
+# per-PR tier-1 suite (ROADMAP promotion item); the heavier families stay
+# behind the nightly/dispatch `placements-transformer` CI job's
+# PLACEMENTS_TRANSFORMER=1 opt-in (with 8 forced host devices).
 # ---------------------------------------------------------------------------
+
+TIER1_FAMILIES = ("dense", "ssm")
 
 TRANSFORMER_FAMILIES = [
     ("dense", "olmo-1b"),
@@ -341,7 +345,8 @@ def _family_engine(arch, backend):
 @pytest.mark.parametrize("family,arch", TRANSFORMER_FAMILIES,
                          ids=[f for f, _ in TRANSFORMER_FAMILIES])
 def test_transformer_family_parity(family, arch):
-    if not os.environ.get("PLACEMENTS_TRANSFORMER"):
+    if (family not in TIER1_FAMILIES
+            and not os.environ.get("PLACEMENTS_TRANSFORMER")):
         pytest.skip("nightly placements-transformer job "
                     "(set PLACEMENTS_TRANSFORMER=1 to run)")
     hv = _family_engine(arch, "vmap").run()

@@ -3,7 +3,6 @@ the python-loop path for every block family."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

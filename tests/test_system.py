@@ -6,7 +6,6 @@ import numpy as np
 import pytest
 
 from repro.configs import AveragingConfig, get_config, reduced
-from repro.core.controller import make_controller
 from repro.data.pipeline import SyntheticTokens
 from repro.launch.serve import generate
 from repro.launch.steps import make_loss_fn, make_serve_step
